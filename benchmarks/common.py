@@ -1,0 +1,39 @@
+"""Benchmark timing helpers (CPU wall-clock, jit-warmed, block_until_ready)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median microseconds per call (jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def time_py(fn, *args, iters: int = 5) -> float:
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def hlo_cost(jitted, *args) -> dict:
+    """flops / bytes accessed from the compiled module (per device)."""
+    compiled = jitted.lower(*args).compile()
+    cost = dict(compiled.cost_analysis())
+    return {"flops": float(cost.get("flops", 0)),
+            "bytes": float(cost.get("bytes accessed", 0))}

@@ -1,0 +1,78 @@
+"""Paper Table I analog: hardware cost of the FUSED engine vs the MODULAR
+pipeline (Fig. 1: compaction PRRA + aggregation + second PRRA).
+
+Two complementary measurements:
+  1. the paper's entity-count model (core/complexity.py) across P —
+     reproduces the `2P+PRRA` vs `3P+2PRRA` saving and the >=1.9x claim;
+  2. measured HLO cost (flops / bytes accessed, XLA cost analysis) of our
+     fused single-pass engine vs a modular two-pass implementation of the
+     same query (aggregate pass + separate compaction pass), plus wall time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import hlo_cost, time_fn
+from repro.core import complexity, engine, segscan
+from repro.core.combiners import get_combiner
+
+
+def modular_group_by(groups, keys, op="sum"):
+    """Two-pass modular pipeline (the paper's Fig. 1 baseline): pass 1
+    computes per-element aggregates + last flags; pass 2 is an independent
+    compaction network (its own prefix scan — the second PRRA)."""
+    combiner = get_combiner(op)
+    groups = groups.astype(jnp.int32)
+    n = groups.shape[0]
+    # pass 1: aggregation scan
+    starts = segscan.segment_starts(groups)
+    ends = segscan.segment_ends(groups)
+    scanned = segscan.segmented_scan(starts, combiner.lift(keys), combiner)
+    values = combiner.finalize(scanned)
+    # pass 2: an independent compaction (recomputes its own prefix sums,
+    # as a second PRRA would)
+    perm = segscan.exclusive_prefix_sum(ends)
+    idx = jnp.where(ends, perm, n)
+    out_g = jnp.full((n + 1,), engine.PAD_GROUP, jnp.int32).at[idx].set(
+        groups, mode="drop")[:n]
+    out_v = jnp.zeros((n + 1,), values.dtype).at[idx].set(
+        values, mode="drop")[:n]
+    num = jnp.sum(ends.astype(jnp.int32))
+    return engine.GroupAggResult(out_g, out_v, jnp.arange(n) < num, num)
+
+
+def run() -> list[dict]:
+    rows = []
+    # --- 1. entity-count model (the paper's own complexity axis) ---
+    for p in (2, 4, 8, 16, 32):
+        rows.append({
+            "name": f"complexity/entities_P{p}",
+            "us_per_call": 0.0,
+            "derived": (f"fused={complexity.engine_entities(p)} "
+                        f"modular={complexity.modular_entities(p)} "
+                        f"ratio={complexity.reduction_ratio(p):.2f}"),
+        })
+
+    # --- 2. measured HLO + wall cost, fused vs modular ---
+    rng = np.random.default_rng(0)
+    n = 16384  # the paper's evaluation size
+    g = jnp.array(np.sort(rng.integers(0, 256, n)).astype(np.int32))
+    k = jnp.array(rng.integers(0, 1000, n).astype(np.int32))
+
+    fused = jax.jit(lambda g, k: engine.group_by_aggregate(g, k, "sum"))
+    modular = jax.jit(lambda g, k: modular_group_by(g, k, "sum"))
+    # correctness cross-check before timing
+    a, b = fused(g, k), modular(g, k)
+    np.testing.assert_array_equal(np.array(a.values), np.array(b.values))
+
+    for name, fn in (("fused", fused), ("modular", modular)):
+        cost = hlo_cost(fn, g, k)
+        us = time_fn(fn, g, k)
+        rows.append({
+            "name": f"complexity/hlo_{name}",
+            "us_per_call": round(us, 1),
+            "derived": f"flops={cost['flops']:.3e} bytes={cost['bytes']:.3e}",
+        })
+    return rows

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  complexity_table    -> paper Table I (entity model + fused-vs-modular HLO)
+  speedup_groupby     -> paper §IV speedup protocol (distribution sweep)
+  swag_bench          -> paper §V / Fig. 4 SWAG throughput (incl. median)
+  sort_bench          -> sorter substrate (FLiMS role)
+  moe_dispatch_bench  -> beyond-paper: engine-as-MoE-dispatch vs one-hot
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (complexity_table, moe_dispatch_bench, sort_bench,
+                            speedup_groupby, swag_bench)
+    modules = [
+        ("complexity_table", complexity_table),
+        ("speedup_groupby", speedup_groupby),
+        ("swag_bench", swag_bench),
+        ("sort_bench", sort_bench),
+        ("moe_dispatch_bench", moe_dispatch_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        for row in mod.run():
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

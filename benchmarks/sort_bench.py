@@ -1,0 +1,36 @@
+"""Sorter substrate (the paper's FLiMS role): bitonic network vs XLA sort.
+
+The engine's contract is a sorted stream; this table characterizes the two
+sorter backends across sizes (the bitonic network is the VMEM-resident
+window sorter; lax.sort is the large-array baseline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import sorter
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(3)
+    rows = []
+    for n in (1024, 4096, 16384):
+        g = jnp.array(rng.integers(0, 1 << 20, n).astype(np.int32))
+        k = jnp.array(rng.integers(0, 1 << 20, n).astype(np.int32))
+        bit = jax.jit(lambda g, k: sorter.sort_pairs(g, k))
+        xla = jax.jit(lambda g, k: sorter.sort_pairs_xla(g, k))
+        us_b = time_fn(bit, g, k, iters=5, warmup=2)
+        us_x = time_fn(xla, g, k, iters=5, warmup=2)
+        rows.append({
+            "name": f"sort/bitonic_n{n}",
+            "us_per_call": round(us_b, 1),
+            "derived": f"keys_per_s={n / (us_b / 1e6):.3e}",
+        })
+        rows.append({
+            "name": f"sort/xla_n{n}",
+            "us_per_call": round(us_x, 1),
+            "derived": f"keys_per_s={n / (us_x / 1e6):.3e}",
+        })
+    return rows

@@ -1,0 +1,11 @@
+"""internlm2-1.8b — dense GQA [arXiv:2403.17297]."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("internlm2-1.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-1.8b", family="dense",
+        num_layers=24, d_model=2048,
+        num_heads=16, num_kv_heads=8, d_ff=8192, vocab_size=92544,
+    )

@@ -1,0 +1,24 @@
+"""repro.core — the paper's streaming aggregation engine (pure-JAX reference).
+
+Public surface:
+  * combiners:  the function_select algebra (sum/min/max/count/mean/dc/...)
+  * engine:     5-step group-by-aggregate over sorted streams
+  * streaming:  rolling multi-batch driver (non-blocking pipeline semantics)
+  * sorter:     bitonic network (FLiMS adaptation) + lax.sort baseline
+  * swag:       sliding-window aggregation incl. median
+  * complexity: the paper's entity-count model
+"""
+from repro.core.combiners import (  # noqa: F401
+    ALL_OPS, PAPER_BASE_OPS, PAPER_DC_OPS, Combiner, get_combiner,
+    register_combiner)
+from repro.core.engine import (  # noqa: F401
+    GroupAggResult, PAD_GROUP, engine_step, group_by_aggregate,
+    multi_aggregate, rr_ports)
+from repro.core.segscan import (  # noqa: F401
+    Carry, exclusive_prefix_sum, init_carry, segment_ends, segment_starts,
+    segmented_scan)
+from repro.core.sorter import (  # noqa: F401
+    bitonic_sort, next_pow2, sort_pairs, sort_pairs_xla)
+from repro.core.streaming import StreamingAggregator, StreamResult  # noqa: F401
+from repro.core.swag import frame_windows, num_windows, swag, swag_median  # noqa: F401
+from repro.core import complexity  # noqa: F401

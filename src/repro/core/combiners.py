@@ -1,0 +1,298 @@
+"""Monoid algebra for the aggregation engine (the paper's ``function_select``).
+
+The paper's entities ``n`` are scan nodes whose functional unit is selected at
+runtime by a memory-mapped ``function_select`` register.  Here each operator is
+a :class:`Combiner` — an associative monoid over a per-element *state* pytree —
+selected at trace time.  The engine (``engine.py``) is written once against
+this algebra, which is the "adaptable" axis of the paper: one scan topology,
+many operators.
+
+State conventions
+-----------------
+``lift(key) -> state``      maps one tuple's key into scan state
+``op(a, b) -> state``       associative combine of two adjacent states
+                            (a is the *earlier* range, b the *later* one)
+``finalize(state) -> value``  maps the last-of-group state to the result field
+``identity(shape, dtype) -> state``  neutral element (used for carry init)
+
+Distinct count (the paper's "dc" engine variant) carries ``(dc, first, last)``
+and implements exactly the paper's distributed rule: when merging two adjacent
+ranges of one group, if the boundary keys are equal the common key was counted
+twice, so subtract one.  Like the paper (which sorts the full 64-bit tuple),
+it requires keys sorted *within* each group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+State = Any  # pytree of arrays, all leading dims broadcastable with the keys
+
+
+@dataclasses.dataclass(frozen=True)
+class Combiner:
+    name: str
+    lift: Callable[[Array], State]
+    op: Callable[[State, State], State]
+    finalize: Callable[[State], Array]
+    identity: Callable[[tuple, jnp.dtype], State]
+    #: whether keys must be sorted within each group (paper's dc requirement)
+    needs_sorted_keys: bool = False
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Combiner({self.name})"
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """Accumulation dtype: widen small ints/floats so long streams don't wrap.
+
+    The paper widens the rolling count to 32 bits in the ``n'`` entities for
+    the same reason ("able to count beyond P elements").
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.dtype(jnp.int64) if jax.config.jax_enable_x64 else jnp.dtype(jnp.int32)
+    if dtype == jnp.bfloat16 or dtype == jnp.float16:
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def _sum() -> Combiner:
+    return Combiner(
+        name="sum",
+        lift=lambda k: k.astype(_acc_dtype(k.dtype)),
+        op=lambda a, b: a + b,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.zeros(shape, _acc_dtype(dtype)),
+    )
+
+
+def _min() -> Combiner:
+    return Combiner(
+        name="min",
+        lift=lambda k: k,
+        op=jnp.minimum,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.full(shape, _max_value(dtype), dtype),
+    )
+
+
+def _max() -> Combiner:
+    return Combiner(
+        name="max",
+        lift=lambda k: k,
+        op=jnp.maximum,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.full(shape, _min_value(dtype), dtype),
+    )
+
+
+def _count() -> Combiner:
+    # lift adds 1 instead of the key — verbatim from the paper's mean support:
+    # "adding 1 instead of the key".
+    return Combiner(
+        name="count",
+        lift=lambda k: jnp.ones(k.shape, jnp.int32),
+        op=lambda a, b: a + b,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.zeros(shape, jnp.int32),
+    )
+
+
+def _mean() -> Combiner:
+    # state = (sum, count); the divide lives in finalize — the paper performs
+    # it in the n' entities ("it is the n' that will divide the result by the
+    # corresponding group tuple count").
+    def lift(k):
+        return (k.astype(_acc_dtype(k.dtype)), jnp.ones(k.shape, jnp.int32))
+
+    def op(a, b):
+        return (a[0] + b[0], a[1] + b[1])
+
+    def finalize(s):
+        total, cnt = s
+        return total.astype(jnp.float32) / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+    return Combiner(
+        name="mean",
+        lift=lift,
+        op=op,
+        finalize=finalize,
+        identity=lambda shape, dtype: (
+            jnp.zeros(shape, _acc_dtype(dtype)),
+            jnp.zeros(shape, jnp.int32),
+        ),
+    )
+
+
+def _distinct_count() -> Combiner:
+    """Paper's "dc" variant: state = (dc, first_key, last_key).
+
+    Merging adjacent sorted ranges L, R of one group:
+      boundary equal (last_L == first_R)  -> dc_L + dc_R - 1   (double count)
+      boundary differs                    -> dc_L + dc_R       (disjoint sets)
+    """
+
+    def lift(k):
+        return (jnp.ones(k.shape, jnp.int32), k, k)
+
+    def op(a, b):
+        dca, fa, la = a
+        dcb, fb, lb = b
+        dup = (la == fb).astype(jnp.int32)
+        return (dca + dcb - dup, fa, lb)
+
+    def finalize(s):
+        return s[0]
+
+    def identity(shape, dtype):
+        # Identity uses a sentinel "first/last" that never equals real keys in
+        # the boundary test because dc==0 ranges are only merged via the carry
+        # path which special-cases emptiness (see segscan.merge_carry).
+        return (
+            jnp.zeros(shape, jnp.int32),
+            jnp.full(shape, _max_value(dtype), dtype),
+            jnp.full(shape, _min_value(dtype), dtype),
+        )
+
+    return Combiner(
+        name="distinct_count",
+        lift=lift,
+        op=op,
+        finalize=finalize,
+        identity=identity,
+        needs_sorted_keys=True,
+    )
+
+
+def _first() -> Combiner:
+    return Combiner(
+        name="first",
+        lift=lambda k: k,
+        op=lambda a, b: a,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.zeros(shape, dtype),
+    )
+
+
+def _last() -> Combiner:
+    return Combiner(
+        name="last",
+        lift=lambda k: k,
+        op=lambda a, b: b,
+        finalize=lambda s: s,
+        identity=lambda shape, dtype: jnp.zeros(shape, dtype),
+    )
+
+
+def _variance() -> Combiner:
+    """Population variance via the parallel Welford / Chan monoid:
+    state = (count, mean, M2);  merging two ranges:
+        d = mean_b - mean_a
+        M2 = M2_a + M2_b + d^2 * n_a n_b / (n_a + n_b)
+    Numerically stable for streaming use — an engine operator the paper's
+    FPGA would implement with one extra multiplier per node."""
+
+    def lift(k):
+        k32 = k.astype(jnp.float32)
+        return (jnp.ones(k.shape, jnp.float32), k32, jnp.zeros_like(k32))
+
+    def op(a, b):
+        na, ma, m2a = a
+        nb, mb, m2b = b
+        n = na + nb
+        d = mb - ma
+        safe_n = jnp.maximum(n, 1.0)
+        mean = ma + d * nb / safe_n
+        m2 = m2a + m2b + jnp.square(d) * na * nb / safe_n
+        return (n, mean, m2)
+
+    def finalize(s):
+        n, _, m2 = s
+        return m2 / jnp.maximum(n, 1.0)
+
+    def identity(shape, dtype):
+        return (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32),
+                jnp.zeros(shape, jnp.float32))
+
+    return Combiner("variance", lift, op, finalize, identity)
+
+
+def _argminmax(mode: str) -> Combiner:
+    """Index of the min/max key within the group (first occurrence).
+    State = (best_key, position); positions are attached by the engine via
+    lift on (key) with an enclosing iota — here we lift (key, running idx)
+    using a per-call counter carried in the key's position."""
+
+    better = jnp.less if mode == "argmin" else jnp.greater
+
+    def lift(k):
+        idx = jnp.arange(k.shape[-1], dtype=jnp.int32)
+        return (k, idx)
+
+    def op(a, b):
+        ka, ia = a
+        kb, ib = b
+        take_b = better(kb, ka)
+        return (jnp.where(take_b, kb, ka), jnp.where(take_b, ib, ia))
+
+    def finalize(s):
+        return s[1]
+
+    def identity(shape, dtype):
+        fill = _max_value(dtype) if mode == "argmin" else _min_value(dtype)
+        return (jnp.full(shape, fill, dtype), jnp.zeros(shape, jnp.int32))
+
+    return Combiner(mode, lift, op, finalize, identity)
+
+
+def _min_value(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).min
+    return -jnp.inf
+
+
+def _max_value(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).max
+    return jnp.inf
+
+
+_REGISTRY: dict[str, Callable[[], Combiner]] = {
+    "sum": _sum,
+    "min": _min,
+    "max": _max,
+    "count": _count,
+    "mean": _mean,
+    "distinct_count": _distinct_count,
+    "first": _first,
+    "last": _last,
+    "variance": _variance,
+    "argmin": lambda: _argminmax("argmin"),
+    "argmax": lambda: _argminmax("argmax"),
+}
+
+#: operators supported by the paper's base engine configuration
+PAPER_BASE_OPS = ("min", "max", "sum", "count")
+#: + the "dc" configuration
+PAPER_DC_OPS = PAPER_BASE_OPS + ("distinct_count",)
+#: + mean, demonstrated in simulation in the paper
+ALL_OPS = tuple(_REGISTRY)
+
+
+def get_combiner(name: str) -> Combiner:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(f"unknown aggregate op {name!r}; have {sorted(_REGISTRY)}") from None
+
+
+def register_combiner(name: str, factory: Callable[[], Combiner]) -> None:
+    """Extension point — the paper's 'adaptable' knob for custom engines."""
+    _REGISTRY[name] = factory

@@ -1,0 +1,152 @@
+"""The group-by-aggregate engine — the paper's Fig. 2, five steps, in JAX.
+
+    (a) buffer one batch  ->  handled by the streaming driver / ``open_tail``
+    (b) mark last-of-group (entities t)          ->  :func:`segscan.segment_ends`
+    (c) rolling segmented prefix scan (entities n) -> :func:`segscan.segmented_scan`
+    (d) finalize + rolling carry (entities n')   ->  ``combiner.finalize`` + Carry
+    (e) reverse-butterfly round-robin compaction ->  prefix-sum of valid bits
+                                                     + one static-shape scatter
+
+Static shapes (XLA) replace the hardware's valid wires: outputs are padded to
+the input length with a ``valid`` mask and a ``num_groups`` count.  The PRRA's
+*round-robin* port rotation is preserved as :func:`rr_ports` (rolling offset =
+groups emitted so far), which the streaming driver threads through batches.
+
+Inputs must be sorted by group id (the engine's contract, as in the paper —
+an upstream sorter provides this; see ``core/sorter.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import segscan
+from repro.core.combiners import Combiner, get_combiner
+
+Array = jax.Array
+
+#: sentinel group id for padding slots (sorts after every real group id)
+PAD_GROUP = jnp.iinfo(jnp.int32).max
+
+
+class GroupAggResult(NamedTuple):
+    groups: Array       # [N] int32   — compacted unique group ids (padded tail)
+    values: Array       # [N]         — aggregate per group (padded tail)
+    valid: Array        # [N] bool    — which output slots hold a real group
+    num_groups: Array   # scalar int32
+
+
+def _resolve(op) -> Combiner:
+    return op if isinstance(op, Combiner) else get_combiner(op)
+
+
+def engine_step(groups: Array, keys: Array, op, *,
+                carry: segscan.Carry | None = None,
+                open_tail: bool = False,
+                n_valid: Array | None = None) -> tuple[GroupAggResult, segscan.Carry]:
+    """One pass of the engine over a batch of sorted ``(group, key)`` tuples.
+
+    Args:
+      groups: [N] int group ids, sorted ascending (ties contiguous).
+      keys:   [N] values to aggregate.
+      op:     combiner name or :class:`Combiner`.
+      carry:  rolling state from the previous batch (streaming mode).
+      open_tail: if True, the final group is *not* emitted — it may continue
+        into the next batch (paper step (a): the one-batch lookahead buffer).
+      n_valid: optional scalar — only the first ``n_valid`` tuples are real
+        (the "dense stream" requirement; padding must sit at the tail).
+
+    Returns:
+      (result, new_carry).
+    """
+    combiner = _resolve(op)
+    n = groups.shape[0]
+    groups = groups.astype(jnp.int32)
+
+    if n_valid is not None:
+        in_valid = jnp.arange(n) < n_valid
+        groups = jnp.where(in_valid, groups, PAD_GROUP)
+    else:
+        in_valid = None
+
+    # (b) entities t: mark last tuple per group
+    ends = segscan.segment_ends(groups)
+    starts = segscan.segment_starts(groups)
+
+    # (c) entities n: segmented inclusive scan of the lifted keys
+    state = combiner.lift(keys)
+    scanned = segscan.segmented_scan(starts, state, combiner)
+
+    # (d) entities n': merge the rolling carry into the leading segment
+    if carry is None:
+        carry = segscan.init_carry(combiner, keys.dtype)
+    scanned = segscan.merge_carry(carry, groups, scanned, combiner)
+
+    emit = ends
+    if in_valid is not None:
+        emit = emit & (groups != PAD_GROUP)
+    if open_tail:
+        # the batch's final *real* tuple is withheld (its group may continue)
+        last_real = (jnp.cumsum(emit[::-1].astype(jnp.int32))[::-1] == 1) & emit
+        emit = emit & ~last_real
+
+    values = combiner.finalize(scanned)
+
+    # (e) reverse butterfly: permutation index = prefix sum of valid bits
+    perm = segscan.exclusive_prefix_sum(emit)
+    scatter_idx = jnp.where(emit, perm, n)  # invalid -> dropped slot
+    out_groups = jnp.full((n + 1,), PAD_GROUP, jnp.int32).at[scatter_idx].set(
+        groups, mode="drop")[:n]
+    out_values = jnp.zeros((n + 1,) + values.shape[1:], values.dtype).at[
+        scatter_idx].set(values, mode="drop")[:n]
+    num = jnp.sum(emit.astype(jnp.int32))
+    out_valid = jnp.arange(n) < num
+
+    new_carry = segscan.update_carry(carry, groups, scanned, emit, combiner)
+    if in_valid is not None:
+        # an all-padding batch must not clobber the carry group id
+        any_real = jnp.any(in_valid)
+        tail_idx = jnp.maximum(jnp.sum(in_valid.astype(jnp.int32)) - 1, 0)
+        tail_state = jax.tree.map(lambda s: s[tail_idx], scanned)
+        new_carry = segscan.Carry(
+            group=jnp.where(any_real, groups[tail_idx], carry.group).astype(jnp.int32),
+            state=jax.tree.map(
+                lambda t, c: jnp.where(any_real, t, c), tail_state,
+                jax.tree.map(jnp.asarray, carry.state)),
+            nonempty=carry.nonempty | any_real,
+            emitted=(carry.emitted + num).astype(jnp.int32),
+        )
+
+    return GroupAggResult(out_groups, out_values, out_valid, num), new_carry
+
+
+def group_by_aggregate(groups: Array, keys: Array, op="sum", *,
+                       n_valid: Array | None = None) -> GroupAggResult:
+    """Single-shot group-by-aggregate over a fully-materialized sorted column.
+
+    This is the SQL ``SELECT g, f(k) FROM t GROUP BY g ORDER BY g`` of the
+    paper's Algorithm 1 (order comes free: input is sorted, compaction is
+    stable).
+    """
+    result, _ = engine_step(groups, keys, op, carry=None, open_tail=False,
+                            n_valid=n_valid)
+    return result
+
+
+def multi_aggregate(groups: Array, keys: Array, ops: tuple[str, ...],
+                    *, n_valid: Array | None = None) -> dict[str, GroupAggResult]:
+    """Evaluate several operators in one logical pass (the hardware evaluates
+    whichever ``function_select`` says; here XLA CSEs the shared mark/compact
+    work across operators)."""
+    return {name: group_by_aggregate(groups, keys, name, n_valid=n_valid)
+            for name in ops}
+
+
+def rr_ports(result: GroupAggResult, emitted_before: Array, p: int) -> Array:
+    """Round-robin output port per emitted group — the PRRA's defining
+    property.  ``emitted_before`` is ``carry.emitted`` *prior* to this batch.
+    """
+    idx = jnp.arange(result.groups.shape[0])
+    return jnp.where(result.valid, (emitted_before + idx) % p, -1)

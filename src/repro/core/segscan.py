@@ -1,0 +1,137 @@
+"""Segmented (rolling) prefix scan — the paper's adapted PRRA scan network.
+
+The PRRA's prefix-scan topology computes, per batch of ``P`` tuples, the
+round-robin permutation indices.  The paper's engine extends each scan node
+(entity ``n``) to *simultaneously* fold the key field under the selected
+aggregate, resetting at group boundaries.  That is precisely a **segmented
+inclusive scan** over the product monoid
+
+    (flag_a, state_a) . (flag_b, state_b)
+        = (flag_a | flag_b,  state_b            if flag_b
+                             op(state_a, state_b) otherwise)
+
+which is associative whenever ``op`` is — so it runs in log depth, exactly the
+butterfly dataflow of the hardware network.
+
+The *rolling* aspect (entities ``n'`` carrying state across batches, e.g. the
+32-bit count that exceeds ``P``) is the :class:`Carry` below: the fold state of
+the last, possibly-unfinished group of the previous batch.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combiners import Combiner
+
+Array = jax.Array
+
+
+def _bcast(flag: Array, leaf: Array) -> Array:
+    """Broadcast a [N]-shaped flag against a [N, ...]-shaped state leaf."""
+    extra = leaf.ndim - flag.ndim
+    return flag.reshape(flag.shape + (1,) * extra) if extra else flag
+
+
+def segment_starts(groups: Array) -> Array:
+    """flags[i] = True iff element i begins a new group (entities ``t``,
+    looking backwards: ``group_i != group_{i-1}``)."""
+    prev = jnp.roll(groups, 1, axis=-1)
+    first = jnp.arange(groups.shape[-1]) == 0
+    return first | (groups != prev)
+
+
+def segment_ends(groups: Array) -> Array:
+    """flags[i] = True iff element i is the last of its group *within the
+    batch* (entities ``t`` with one-batch lookahead: ``group_i != group_{i+1}``).
+
+    Note: the final element is always marked; the streaming driver
+    (``streaming.py``) un-marks it when the next batch continues the group —
+    that is the paper's step (a) buffering of one extra batch.
+    """
+    nxt = jnp.roll(groups, -1, axis=-1)
+    last = jnp.arange(groups.shape[-1]) == groups.shape[-1] - 1
+    return last | (groups != nxt)
+
+
+def segmented_scan(flags: Array, state: Any, combiner: Combiner, *,
+                   axis: int = 0) -> Any:
+    """Inclusive segmented scan of ``state`` along ``axis``.
+
+    ``flags[i]`` marks the first element of each segment.  Log-depth via
+    ``jax.lax.associative_scan`` — the software rendering of the reverse
+    butterfly's O(P log P) node layout.
+    """
+    if axis != 0:
+        raise NotImplementedError("engine operates along axis 0; vmap for batches")
+
+    def combine(a, b):
+        fa, sa = a
+        fb, sb = b
+        merged = combiner.op(sa, sb)
+        keep_b = jax.tree.map(lambda m, y: jnp.where(_bcast(fb, y), y, m), merged, sb)
+        return fa | fb, keep_b
+
+    _, scanned = jax.lax.associative_scan(combine, (flags, state), axis=0)
+    return scanned
+
+
+class Carry(NamedTuple):
+    """Rolling state of the last open group (the paper's ``n'`` signals)."""
+    group: Array      # scalar int — group id of the open segment
+    state: Any        # combiner state folded so far for that group
+    nonempty: Array   # scalar bool — False before any tuple was seen
+    emitted: Array    # scalar int32 — total groups finalized so far (round-robin offset)
+
+
+def init_carry(combiner: Combiner, key_dtype) -> Carry:
+    return Carry(
+        group=jnp.asarray(-1, jnp.int32),
+        state=combiner.identity((), key_dtype),
+        nonempty=jnp.asarray(False),
+        emitted=jnp.asarray(0, jnp.int32),
+    )
+
+
+def merge_carry(carry: Carry, groups: Array, scanned: Any,
+                combiner: Combiner) -> Any:
+    """Fold the carried state into every element of the batch's first segment
+    whose group matches the carry — the rolling hand-off between batches.
+
+    Empty carries are passed through untouched, which keeps identity-free
+    monoids (distinct_count) exact.
+    """
+    first_group = groups[0]
+    starts = segment_starts(groups)
+    # positions still inside the leading segment: no start flag after index 0
+    in_first_seg = jnp.cumsum(starts.astype(jnp.int32)) == 1
+    applies = carry.nonempty & (carry.group == first_group)
+    mask = in_first_seg & applies
+    carry_b = jax.tree.map(lambda c: jnp.asarray(c)[None], carry.state)
+    merged = combiner.op(carry_b, scanned)
+    return jax.tree.map(lambda m, s: jnp.where(_bcast(mask, s), m, s), merged, scanned)
+
+
+def update_carry(carry: Carry, groups: Array, merged: Any, ends: Array,
+                 combiner: Combiner, valid_mask: Array | None = None) -> Carry:
+    """New carry = scan state of the final element (its group may continue
+    into the next batch)."""
+    n = groups.shape[0]
+    last_state = jax.tree.map(lambda s: s[n - 1], merged)
+    emitted = carry.emitted + jnp.sum(ends.astype(jnp.int32)
+                                      if valid_mask is None
+                                      else (ends & valid_mask).astype(jnp.int32))
+    return Carry(
+        group=groups[n - 1].astype(jnp.int32),
+        state=last_state,
+        nonempty=jnp.asarray(True),
+        emitted=emitted.astype(jnp.int32),
+    )
+
+
+def exclusive_prefix_sum(x: Array) -> Array:
+    """Exclusive scan-add — the PRRA's permutation-index computation."""
+    inc = jnp.cumsum(x.astype(jnp.int32), axis=-1)
+    return inc - x.astype(jnp.int32)

@@ -1,0 +1,109 @@
+"""High-throughput sorters feeding the engine.
+
+The paper pairs the engine with an FPGA merge sorter (FLiMS).  FLiMS's core is
+a network of parallel compare-and-exchange stages over bitonic sequences; on
+TPU the natural rendering is a **bitonic sorting network** executed as
+vectorized compare-exchange sweeps over VPU lanes (log^2 depth, fully
+data-independent — no data-dependent control flow, exactly why it suits both
+FPGAs and TPUs).  A Pallas kernel version lives in ``kernels/bitonic``.
+
+Two entry points:
+  * :func:`bitonic_sort`      — the network itself (power-of-two, multi-operand,
+                                lexicographic by the leading ``num_keys`` operands)
+  * :func:`sort_pairs`        — convenience for (group, key) tuples w/ padding
+  * :func:`sort_pairs_xla`    — ``jax.lax.sort`` baseline (XLA's sort) for
+                                large arrays & cross-checking
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _lex_less(a: tuple[Array, ...], b: tuple[Array, ...]) -> Array:
+    """Strict lexicographic a < b over parallel key arrays."""
+    less = jnp.zeros(a[0].shape, bool)
+    eq = jnp.ones(a[0].shape, bool)
+    for x, y in zip(a, b):
+        less = less | (eq & (x < y))
+        eq = eq & (x == y)
+    return less
+
+
+def _compare_exchange(operands: tuple[Array, ...], num_keys: int,
+                      j: int, k: int) -> tuple[Array, ...]:
+    n = operands[0].shape[-1]
+    idx = jnp.arange(n)
+    partner = idx ^ j
+    up = (idx & k) == 0  # ascending block
+
+    gathered = tuple(x[..., partner] for x in operands)
+    self_keys = tuple(operands[:num_keys])
+    part_keys = tuple(gathered[:num_keys])
+
+    is_lower = idx < partner
+    lo = tuple(jnp.where(is_lower, s, p) for s, p in zip(self_keys, part_keys))
+    hi = tuple(jnp.where(is_lower, p, s) for s, p in zip(self_keys, part_keys))
+    # strict compare -> ties never swap (keeps the network deterministic)
+    swap = jnp.where(up, _lex_less(hi, lo), _lex_less(lo, hi))
+    return tuple(jnp.where(swap, g, x) for x, g in zip(operands, gathered))
+
+
+def bitonic_sort(operands: tuple[Array, ...], num_keys: int = 1) -> tuple[Array, ...]:
+    """Sort parallel arrays by the leading ``num_keys`` operands (ascending).
+
+    Length must be a power of two (pad via :func:`sort_pairs`).  The network
+    has log2(n)*(log2(n)+1)/2 compare-exchange sweeps, each one vectorized
+    gather+select — constant control flow, ideal for jit.
+    """
+    n = operands[0].shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic_sort needs power-of-two length, got {n}")
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            operands = _compare_exchange(operands, num_keys, j, k)
+            j //= 2
+        k *= 2
+    return operands
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def sort_pairs(groups: Array, keys: Array, *,
+               full_width: bool = True) -> tuple[Array, Array]:
+    """Sort (group, key) tuples for the engine.
+
+    ``full_width=True`` sorts by (group, key) — the paper's configuration
+    ("the sorting module was here configured to use the entire width in its
+    comparisons (64-bit)"), which distinct_count requires.  ``False`` sorts by
+    group only (sufficient for min/max/sum/count, as the paper notes).
+    """
+    n = groups.shape[-1]
+    m = next_pow2(n)
+    if m != n:
+        pad_g = jnp.full(groups.shape[:-1] + (m - n,), jnp.iinfo(jnp.int32).max,
+                         groups.dtype)
+        pad_k = jnp.zeros(keys.shape[:-1] + (m - n,), keys.dtype)
+        groups = jnp.concatenate([groups, pad_g], axis=-1)
+        keys = jnp.concatenate([keys, pad_k], axis=-1)
+    num_keys = 2 if full_width else 1
+    g, k = bitonic_sort((groups, keys), num_keys=num_keys)
+    return g[..., :n], k[..., :n]
+
+
+def sort_pairs_xla(groups: Array, keys: Array, *,
+                   full_width: bool = True) -> tuple[Array, Array]:
+    """``jax.lax.sort`` baseline — XLA's own sort, used for large arrays and
+    as an oracle for the network."""
+    g, k = jax.lax.sort((groups, keys), dimension=-1,
+                        num_keys=2 if full_width else 1, is_stable=True)
+    return g, k

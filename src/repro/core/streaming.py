@@ -1,0 +1,118 @@
+"""Streaming (multi-batch) driver — the paper's non-blocking pipeline.
+
+The hardware engine never asserts backpressure: batches of ``P`` tuples flow
+through every cycle and a group's aggregate is emitted the moment its last
+tuple is identified (which requires the one-batch lookahead buffer, step (a)).
+
+Here a batch is an array of ``N`` tuples; :class:`StreamingAggregator` holds
+the rolling carry (the ``n'`` state) between ``push()`` calls.  Semantics:
+
+  * a group fully contained in past batches is emitted by the push() that
+    first proves it closed (i.e. sees a different leading group id);
+  * the final, possibly-open group of each batch is withheld (``open_tail``);
+  * ``flush()`` closes the stream and emits the last group.
+
+Outputs are padded to ``N + 1`` slots (the +1 holds a carried-over group that
+closed at a batch boundary) with a ``valid`` mask — the static-shape analogue
+of the PRRA's per-port valid wires.  ``rr_port`` reproduces the round-robin
+port rotation across the whole stream.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import segscan
+from repro.core.combiners import Combiner, get_combiner
+
+Array = jax.Array
+
+
+class StreamResult(NamedTuple):
+    groups: Array      # [N+1]
+    values: Array      # [N+1]
+    valid: Array       # [N+1]
+    num_groups: Array  # scalar
+    rr_port: Array     # [N+1] round-robin output port (-1 where invalid)
+
+
+def _push(groups: Array, keys: Array, carry: segscan.Carry, combiner: Combiner,
+          n_valid: Array | None, p_ports: int) -> tuple[StreamResult, segscan.Carry]:
+    n = groups.shape[0]
+    emitted_before = carry.emitted
+
+    closes_carry = carry.nonempty & (groups[0].astype(jnp.int32) != carry.group)
+    if n_valid is not None:
+        closes_carry = closes_carry & (n_valid > 0)
+    carried_group = carry.group
+    carried_value = combiner.finalize(jax.tree.map(jnp.asarray, carry.state))
+
+    # neutralize the carry before the engine merges it if it is being closed
+    live_carry = segscan.Carry(
+        group=jnp.where(closes_carry, jnp.asarray(-1, jnp.int32), carry.group),
+        state=carry.state,
+        nonempty=carry.nonempty & ~closes_carry,
+        emitted=carry.emitted + closes_carry.astype(jnp.int32),
+    )
+
+    result, new_carry = _engine.engine_step(
+        groups, keys, combiner, carry=live_carry, open_tail=True, n_valid=n_valid)
+
+    # prepend the carried group's slot
+    out_groups = jnp.concatenate([
+        jnp.where(closes_carry, carried_group, _engine.PAD_GROUP)[None],
+        result.groups])
+    out_values = jnp.concatenate([
+        jnp.where(closes_carry, carried_value,
+                  jnp.zeros((), carried_value.dtype))[None],
+        result.values])
+    num = result.num_groups + closes_carry.astype(jnp.int32)
+    # rotate the compacted slots so valid entries stay dense: if the carry slot
+    # is unused, shift engine results up by one
+    shift = (~closes_carry).astype(jnp.int32)
+    idx = jnp.arange(n + 1)
+    src = jnp.clip(idx + shift, 0, n)
+    out_groups = out_groups[src]
+    out_values = out_values[src]
+    out_valid = idx < num
+
+    rr = jnp.where(out_valid, (emitted_before + idx) % p_ports, -1)
+    return StreamResult(out_groups, out_values, out_valid, num, rr), new_carry
+
+
+class StreamingAggregator:
+    """Stateful wrapper; one jit-compiled engine pass per ``push``."""
+
+    def __init__(self, op="sum", *, key_dtype=jnp.int32, p_ports: int = 4):
+        self.combiner = op if isinstance(op, Combiner) else get_combiner(op)
+        self.carry = segscan.init_carry(self.combiner, key_dtype)
+        self.p_ports = p_ports
+        self._step = jax.jit(functools.partial(
+            _push, combiner=self.combiner, p_ports=p_ports),
+            static_argnames=())
+
+    def push(self, groups: Array, keys: Array,
+             n_valid: Array | None = None) -> StreamResult:
+        groups = jnp.asarray(groups, jnp.int32)
+        keys = jnp.asarray(keys)
+        result, self.carry = self._step(groups, keys, carry=self.carry,
+                                        n_valid=n_valid)
+        return result
+
+    def flush(self) -> StreamResult:
+        """Close the stream: emit the open group, reset the carry."""
+        c = self.carry
+        value = self.combiner.finalize(jax.tree.map(jnp.asarray, c.state))
+        groups = jnp.where(c.nonempty, c.group, _engine.PAD_GROUP)[None]
+        values = jnp.where(c.nonempty, value, jnp.zeros((), value.dtype))[None]
+        valid = c.nonempty[None]
+        num = c.nonempty.astype(jnp.int32)
+        rr = jnp.where(valid, c.emitted % self.p_ports, -1)
+        self.carry = segscan.init_carry(self.combiner,
+                                        jax.tree.leaves(c.state)[0].dtype
+                                        if jax.tree.leaves(c.state) else jnp.int32)
+        return StreamResult(groups, values, valid, num, rr)

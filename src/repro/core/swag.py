@@ -1,0 +1,105 @@
+"""Sliding-window aggregation (SWAG) — the paper's Fig. 4 pipeline.
+
+    window buffer (WS, WA)  ->  small sorter  ->  group-by-aggregate engine
+
+Queries are of the form "aggregate the last WS tuples per group id, advancing
+by WA" (time = tuple count, as in the paper's primary case).  Sorting each
+window by group reduces SWAG to the engine's sorted-stream contract; because
+the sorter sees the whole window before flushing, *non-incremental* functions
+(median) get the group cardinalities for free — the paper's key argument for
+the sort-based SWAG design (vs. hash sets sized for the worst case).
+
+Windows are framed with a strided gather (the "simple buffering arrangement"
+that reuses tuples when WA < WS) and processed with ``vmap`` — the software
+analogue of the paper's double-buffered sorters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import segscan, sorter
+
+Array = jax.Array
+
+
+def num_windows(n: int, ws: int, wa: int) -> int:
+    if ws > n:
+        return 0
+    return (n - ws) // wa + 1
+
+
+def frame_windows(x: Array, ws: int, wa: int) -> Array:
+    """[N] -> [num_windows, WS] strided view (tuples reused when WA < WS)."""
+    nw = num_windows(x.shape[-1], ws, wa)
+    idx = jnp.arange(nw)[:, None] * wa + jnp.arange(ws)[None, :]
+    return x[..., idx]
+
+
+def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
+         presorted: bool = False, use_xla_sort: bool = False
+         ) -> _engine.GroupAggResult:
+    """Sliding-window group-by-aggregate.
+
+    Returns a :class:`GroupAggResult` whose arrays carry a leading
+    ``[num_windows]`` axis.
+    """
+    gw = frame_windows(groups, ws, wa)
+    kw = frame_windows(keys, ws, wa)
+
+    def per_window(g, k):
+        if not presorted:
+            srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
+            g, k = srt(g, k, full_width=True)
+        return _engine.group_by_aggregate(g, k, op)
+
+    return jax.vmap(per_window)(gw, kw)
+
+
+class MedianResult(NamedTuple):
+    groups: Array   # [num_windows, WS]
+    medians: Array  # [num_windows, WS] (float32 if interpolate else key dtype)
+    valid: Array    # [num_windows, WS]
+    num_groups: Array  # [num_windows]
+
+
+def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
+                interpolate: bool = False, use_xla_sort: bool = False
+                ) -> MedianResult:
+    """Median per group per window — the paper's non-incremental example.
+
+    The sorter output is consumed *with* group cardinalities (paper: "append
+    the median-related information such as group cardinality alongside the
+    data"): we take counts + group start offsets from one engine pass and pick
+    the middle element(s) of each group's sorted run.
+    """
+    gw = frame_windows(groups, ws, wa)
+    kw = frame_windows(keys, ws, wa)
+
+    def per_window(g, k):
+        srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
+        g, k = srt(g, k, full_width=True)
+        counts = _engine.group_by_aggregate(g, k, "count")
+        n = g.shape[0]
+        starts = segscan.segment_starts(g)
+        seg_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
+        # start_pos[j] = index of first element of group j (scatter-min onto
+        # an identity-filled buffer)
+        start_pos = jnp.full((n,), n, jnp.int32).at[seg_id].min(
+            jnp.arange(n, dtype=jnp.int32), mode="drop",
+            indices_are_sorted=True)
+        cnt = counts.values.astype(jnp.int32)
+        lo_idx = start_pos + jnp.maximum(cnt - 1, 0) // 2
+        hi_idx = start_pos + cnt // 2
+        lo = k[jnp.clip(lo_idx, 0, n - 1)]
+        hi = k[jnp.clip(hi_idx, 0, n - 1)]
+        if interpolate:
+            med = (lo.astype(jnp.float32) + hi.astype(jnp.float32)) / 2.0
+        else:
+            med = lo  # lower median (stays in the key domain)
+        return MedianResult(counts.groups, med, counts.valid, counts.num_groups)
+
+    return jax.vmap(per_window)(gw, kw)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, DataPipeline  # noqa: F401
+from repro.data.stats import domain_stats  # noqa: F401

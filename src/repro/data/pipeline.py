@@ -1,0 +1,75 @@
+"""Deterministic synthetic data pipeline (checkpointable, shard-aware).
+
+Produces the training stream for the examples/benchmarks: token sequences
+drawn from a per-domain Markov-ish hash mix, where the *domain* id is the
+group key the aggregation engine summarizes over (per-domain loss/token
+statistics — the paper's analytics use case living inside the training
+loop; see stats.py).
+
+Determinism: batch ``i`` depends only on (seed, i) — resuming from a
+checkpointed ``step`` reproduces the exact stream, which is what makes
+checkpoint/restart bit-reproducible.  Sharding: with ``num_shards > 1`` each
+host materializes only its slice of the global batch (data-parallel hosts).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_domains: int = 16
+    zipf_a: float = 1.3        # domain popularity skew
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+
+
+class DataPipeline:
+    """iterator over batches: tokens/labels/loss_mask/domains."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        if cfg.global_batch % cfg.num_shards:
+            raise ValueError("global_batch must divide num_shards")
+        self.cfg = cfg
+        self.step = start_step
+        ranks = np.arange(1, cfg.num_domains + 1, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_a)
+        self._domain_p = w / w.sum()
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        batch = self.make_batch(self.step)
+        self.step += 1
+        return batch
+
+    def make_batch(self, step: int) -> dict:
+        cfg = self.cfg
+        local = cfg.global_batch // cfg.num_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.shard]))
+        domains = rng.choice(cfg.num_domains, size=(local,), p=self._domain_p)
+        # domain-dependent unigram pockets: domain d draws from a vocab band
+        base = (domains[:, None].astype(np.int64) * 7919) % cfg.vocab_size
+        width = max(cfg.vocab_size // 4, 8)
+        tokens = (base + rng.integers(0, width, size=(local, cfg.seq_len))
+                  ) % cfg.vocab_size
+        labels = np.roll(tokens, -1, axis=1)
+        loss_mask = np.ones((local, cfg.seq_len), np.float32)
+        loss_mask[:, -1] = 0.0
+        return {
+            "tokens": tokens.astype(np.int32),
+            "labels": labels.astype(np.int32),
+            "loss_mask": loss_mask,
+            "domains": domains.astype(np.int32),
+        }

@@ -1,0 +1,25 @@
+"""Per-domain streaming statistics via the aggregation engine.
+
+This is the paper's engine doing its day job *inside the training loop*: the
+trainer pushes (domain, per-sequence loss) tuples through a
+StreamingAggregator to keep running per-domain loss means / token counts —
+the group-by-aggregate query of the paper's Algorithm 1, evaluated online
+with zero hash tables.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import group_by_aggregate, sort_pairs_xla
+
+
+def domain_stats(domains, values, ops=("mean", "count", "min", "max")) -> dict:
+    """One-shot per-domain aggregate of a batch.  Returns {op: (groups,
+    values, n)} with padded arrays (valid prefix of length n)."""
+    g, v = sort_pairs_xla(jnp.asarray(domains, jnp.int32),
+                          jnp.asarray(values), full_width=False)
+    out = {}
+    for op in ops:
+        r = group_by_aggregate(g, v, op)
+        out[op] = (r.groups, r.values, r.num_groups)
+    return out

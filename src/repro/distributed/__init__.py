@@ -1,0 +1,1 @@
+from repro.distributed.sharding import Scheme, make_scheme  # noqa: F401

@@ -1,0 +1,268 @@
+"""Sharding rules: DP / FSDP(ZeRO) / TP / EP / SP over the production mesh.
+
+Mesh axes (mandated): single-pod ``("data", "model")`` = (16, 16); multi-pod
+``("pod", "data", "model")`` = (2, 16, 16).
+
+Default scheme (the paper-faithful baseline; hillclimbs vary it):
+  * batch (DP)             over ("pod", "data")
+  * parameters (FSDP)      dim-0 over ("data",); XLA all-gathers per use
+  * optimizer state (ZeRO) over ("pod", "data") — ZeRO-1 across pods
+  * tensor parallel (TP)   heads / ffn-hidden / vocab over ("model",)
+  * expert parallel (EP)   expert dim over ("data",) when divisible
+  * sequence parallel (SP) hidden [B, T, D] T-sharded over ("model",)
+                           between blocks (opt-in flag)
+
+Every rule checks divisibility and falls back to replication — archs whose
+head counts don't tile the model axis (qwen's 20 H, arctic's 56 H) keep MLP
+TP but drop attention TP rather than failing (DESIGN.md §6).  Vocab sizes are
+padded to 256 at init (configs.base.padded_vocab) so embedding TP always
+tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    mesh: Mesh
+    dp: tuple[str, ...]            # batch axes
+    fsdp: tuple[str, ...]          # param dim-0 axes
+    opt_fsdp: tuple[str, ...]      # optimizer-state dim-0 axes (ZeRO)
+    tp: str | None                 # tensor-parallel axis
+    sp: bool = False               # sequence-parallel activations
+    ep: tuple[str, ...] = ()       # expert axes
+    shard_batch: bool = True       # False for global_batch < |dp| (long_500k)
+
+    def axis_size(self, axes: tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # -- divisibility-guarded axis pickers ---------------------------------
+    def fsdp_if(self, dim: int):
+        return self.fsdp if self.fsdp and dim % self.axis_size(self.fsdp) == 0 \
+            else None
+
+    def opt_fsdp_if(self, dim: int):
+        return self.opt_fsdp if self.opt_fsdp and \
+            dim % self.axis_size(self.opt_fsdp) == 0 else None
+
+    def tp_if(self, dim: int):
+        return self.tp if self.tp and dim % self.mesh.shape[self.tp] == 0 \
+            else None
+
+    def dp_spec(self):
+        return self.dp if self.shard_batch else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_scheme(mesh: Mesh, *, sp: bool = False, shard_batch: bool = True,
+                fsdp_params: bool = True, zero_across_pods: bool = True
+                ) -> Scheme:
+    multi_pod = "pod" in mesh.shape
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fsdp = ("data",) if fsdp_params else ()
+    opt = (("pod", "data") if (multi_pod and zero_across_pods) else ("data",))
+    return Scheme(mesh=mesh, dp=dp, fsdp=fsdp, opt_fsdp=opt, tp="model",
+                  sp=sp, ep=("data",), shard_batch=shard_batch)
+
+
+# --------------------------------------------------------------------------
+# parameter specs (path-pattern rules)
+# --------------------------------------------------------------------------
+
+_ROW_PARALLEL = ("wo", "w_down", "wv@rwkv", "w_out")   # [parallel_in, d_model]
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _param_spec(key: str, shape: tuple[int, ...], cfg: ModelConfig,
+                s: Scheme, *, fsdp_if, for_opt: bool = False) -> P:
+    name = key.rsplit("/", 1)[-1]
+    nd = len(shape)
+    # stacked-run leading layer axis: rules apply to the trailing dims
+    layer_stacked = key.startswith("runs/") or "encoder/runs" in key
+    core = shape[1:] if layer_stacked and nd >= 2 else shape
+    lead = (None,) if layer_stacked and nd >= 2 else ()
+
+    def out(*spec):
+        return P(*(lead + spec))
+
+    attn_tp_q = cfg.num_heads % s.mesh.shape.get(s.tp, 1) == 0 if s.tp else False
+    attn_tp_kv = cfg.num_kv_heads % s.mesh.shape.get(s.tp, 1) == 0 if s.tp else False
+
+    if name == "embed":
+        return P(s.tp_if(shape[0]), fsdp_if(shape[1]))
+    if name == "lm_head":
+        return P(fsdp_if(shape[0]), s.tp_if(shape[1]))
+
+    if len(core) == 3 and name in ("w_gate", "w_up", "w_down") and "moe" in key:
+        e = core[0]
+        # NOTE: spreading optimizer state for expert leaves over
+        # ("pod","data") was tried (args 12.6 -> 8.4 GB) but the params<->opt
+        # reshard of the 100B+ stacked leaves triggers XLA's involuntary
+        # full-rematerialization (replicates the leaf: +200 GB temp).
+        # Optimizer state therefore keeps the EP layout (EXPERIMENTS §Perf).
+        e_axes = s.ep
+        ep_ok = e_axes and e % s.axis_size(e_axes) == 0
+        if name == "w_down":  # [E, F, D]
+            if ep_ok:
+                return out(e_axes, s.tp_if(core[1]), None)
+            return out(None, s.tp_if(core[1]), fsdp_if(core[2]))
+        # [E, D, F]
+        if ep_ok:
+            return out(e_axes, None, s.tp_if(core[2]))
+        return out(None, fsdp_if(core[1]), s.tp_if(core[2]))
+
+    if len(core) == 2:
+        din, dout = core
+        if name == "wq":
+            return out(fsdp_if(din), s.tp_if(dout) if attn_tp_q else None)
+        if name in ("wk", "wv") and ("attn" in key or "xattn" in key):
+            return out(fsdp_if(din), s.tp_if(dout) if attn_tp_kv else None)
+        if name == "wo" and ("attn" in key or "xattn" in key):
+            return out(s.tp_if(din) if attn_tp_q else None, fsdp_if(dout))
+        if "/time/" in key or key.endswith("time"):
+            # rwkv time mix: r/k/v/g column parallel (output heads), o row
+            if name in ("wr", "wk", "wv", "wg"):
+                return out(fsdp_if(din), s.tp_if(dout))
+            if name == "wo":
+                return out(s.tp_if(din), fsdp_if(dout))
+        if name in ("w_gate", "w_up", "wk"):        # column parallel
+            return out(fsdp_if(din), s.tp_if(dout))
+        if name in ("w_down", "wv", "w_out", "wo"):  # row parallel
+            return out(s.tp_if(din), fsdp_if(dout))
+        if name in ("router", "w_in", "wr", "wg",
+                    "mix_lora_a", "w_lora_a"):
+            return out(fsdp_if(din), None)
+        return out(None, None)
+
+    # 1-D / small: replicated
+    return out(*(None,) * len(core))
+
+
+def param_specs(params, cfg: ModelConfig, s: Scheme, *, for_opt: bool = False):
+    """Pytree of PartitionSpec matching ``params``."""
+    fsdp_if = s.opt_fsdp_if if for_opt else s.fsdp_if
+
+    def one(path, leaf):
+        return _param_spec(_leaf_key(path), leaf.shape, cfg, s,
+                           fsdp_if=fsdp_if, for_opt=for_opt)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_specs(opt_state, params, cfg: ModelConfig, s: Scheme):
+    pspec = param_specs(params, cfg, s, for_opt=True)
+    out = {"step": P(), "m": pspec, "v": pspec}
+    if "master" in opt_state:
+        out["master"] = pspec
+    return out
+
+
+def param_shardings(params, cfg, s: Scheme, *, for_opt=False):
+    return jax.tree.map(lambda spec: s.named(spec),
+                        param_specs(params, cfg, s, for_opt=for_opt),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# activation constraints (the model's ShardingCtx)
+# --------------------------------------------------------------------------
+
+class MeshCtx:
+    """ShardingCtx implementation bound to a mesh + scheme."""
+
+    def __init__(self, cfg: ModelConfig, s: Scheme,
+                 remat_policy: str = "none"):
+        self.cfg = cfg
+        self.s = s
+        self.remat_policy = remat_policy
+        dp = s.dp_spec()
+        tp = s.tp
+        seq = tp if s.sp else None
+        self._specs = {
+            "hidden": P(dp, seq, None),
+            "attn_out": P(dp, None, tp),
+            "logits": P(dp, None, s.tp_if(cfg.padded_vocab)),
+            "hidden_decode": P(dp, None, None),
+            "logits_decode": P(dp, s.tp_if(cfg.padded_vocab)),
+            "hidden_flat": P(dp, None),
+            "moe_xe": P(None, dp, s.tp_if(cfg.d_model)),
+            "moe_ye": P(None, dp, s.tp_if(cfg.d_model)),
+        }
+
+    def constrain(self, x, kind: str):
+        spec = self._specs.get(kind)
+        if spec is None:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, self.s.named(spec))
+        except ValueError:
+            return x
+
+
+# --------------------------------------------------------------------------
+# batch / decode-state specs
+# --------------------------------------------------------------------------
+
+def batch_specs(s: Scheme) -> dict:
+    dp = s.dp_spec()
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "loss_mask": P(dp, None),
+        "domains": P(dp),
+        "encoder_embeds": P(dp, None, None),
+        "memory": P(dp, None, None),
+    }
+
+
+def decode_state_specs(state, cfg: ModelConfig, s: Scheme):
+    """Specs for the serve-step decode state (KV caches / SSM states)."""
+    dp = s.dp_spec()
+    tp = s.tp
+
+    def one(path, leaf):
+        key = _leaf_key(path)
+        name = key.rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        if name in ("k", "v") and nd == 5:      # [L, B, S, Hkv, Dh]
+            kv_tp = s.tp_if(leaf.shape[3])
+            if kv_tp is None and leaf.shape[2] % s.mesh.shape.get(
+                    s.tp or "", 1) == 0 and leaf.shape[2] > 1024:
+                # KV heads don't tile the model axis -> shard the cache
+                # SEQUENCE instead (flash-decode style partial softmax; XLA
+                # inserts the max/sum reductions).  This is what keeps a
+                # 32k x 128-batch MHA cache (qwen: 860 GB global) on-chip.
+                return P(None, dp, s.tp, None, None)
+            return P(None, dp, None, kv_tp, None)
+        if name == "S" and nd == 5:             # [L, B, H, Dk, Dv]
+            return P(None, dp, s.tp_if(leaf.shape[2]), None, None)
+        if name == "conv" and nd == 4:          # [L, B, K-1, C]
+            return P(None, dp, None, None)
+        if name in ("shift_t", "shift_c") and nd == 3:   # [L, B, D]
+            return P(None, dp, None)
+        if nd >= 2 and name in ("len",):
+            return P(*(None,) * nd)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(one, state)

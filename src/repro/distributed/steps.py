@@ -1,0 +1,124 @@
+"""jit-able train / serve step factories with full sharding annotations.
+
+``make_train_step`` builds the donate-argnums'd, sharding-annotated SPMD
+train step (fwd + bwd + AdamW) used by both the real trainer and the
+dry-run.  ``make_decode_step`` / ``make_prefill_step`` are the serving
+equivalents.  All shardings derive from distributed.sharding rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.models import model as MDL
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig,
+                    scheme: SH.Scheme, *, remat: str = "dots",
+                    microbatches: int = 1, aux_weight: float = 0.01,
+                    acc_dtype: str = "float32"):
+    """Returns (train_step, ctx).  ``acc_dtype``: gradient-accumulator dtype
+    for the microbatch loop (bfloat16 is the 480B-on-one-pod compromise)."""
+    ctx = SH.MeshCtx(cfg, scheme, remat_policy=remat)
+
+    def loss_for(params, batch):
+        return MDL.loss_fn(params, cfg, batch, ctx=ctx, aux_weight=aux_weight)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches) + x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mb):
+                g_acc, l_acc = acc
+                (l, _m), g = jax.value_and_grad(
+                    loss_for, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(acc_dtype)), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_step, (zero, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+        new_params, new_opt, om = adamw.adamw_update(
+            params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step, ctx
+
+
+def make_prefill_step(cfg: ModelConfig, scheme: SH.Scheme):
+    ctx = SH.MeshCtx(cfg, scheme)
+
+    def prefill_step(params, batch):
+        memory = batch.get("memory")
+        if cfg.is_encoder_decoder:
+            memory = MDL.encode(params, cfg, batch["encoder_embeds"], ctx)
+        x, _ = MDL.forward_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                                  memory=memory)
+        # next-token logits only — the [B, T, V] tensor is never built
+        return x[:, -1] @ MDL.lm_head(params, cfg)
+
+    return prefill_step, ctx
+
+
+def make_decode_step(cfg: ModelConfig, scheme: SH.Scheme):
+    ctx = SH.MeshCtx(cfg, scheme)
+
+    def serve_step(params, token, state):
+        return MDL.decode_step(params, cfg, token, state, ctx=ctx)
+
+    return serve_step, ctx
+
+
+# --------------------------------------------------------------------------
+# shape-struct builders (dry-run inputs: no allocation, weak-type-correct)
+# --------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    return jax.eval_shape(
+        functools.partial(MDL.init_model, cfg=cfg), jax.random.PRNGKey(seed))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(
+        functools.partial(adamw.adamw_init, cfg=opt_cfg), params)
+
+
+def train_input_specs(cfg: ModelConfig, seq: int, batch: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    specs: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.cross_attn_every:
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), dt)
+    return specs
+
+
+def decode_state_specs_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    params = abstract_params(cfg)
+    return jax.eval_shape(
+        lambda p: MDL.init_decode_state(p, cfg, batch, max_len), params)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  * segscan   — tiled rolling segmented scan (the PRRA scan network)
+  * bitonic   — in-VMEM bitonic sorting network (FLiMS adaptation)
+  * groupagg  — the FUSED 5-step group-by-aggregate engine (paper Fig. 2)
+  * swag      — fused sliding-window sort + aggregate (paper Fig. 4)
+
+Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper, auto interpret-mode on CPU) and ``ref.py``
+(pure-jnp oracle).  ``common.py`` holds the shared in-tile primitives
+(Hillis–Steele segscan, reverse-butterfly compaction as shift+select
+rounds, reshape-trick bitonic stages — all gather/scatter-free).
+"""

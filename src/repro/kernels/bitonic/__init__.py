@@ -1,0 +1,1 @@
+from repro.kernels.bitonic.ops import bitonic_sort_tpu, sort_pairs_tpu  # noqa: F401

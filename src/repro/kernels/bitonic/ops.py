@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the bitonic sort kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sorter as _sorter
+from repro.kernels.bitonic import kernel as _k
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "interpret"))
+def bitonic_sort_tpu(operands: tuple, num_keys: int = 1, *,
+                     interpret: bool | None = None) -> tuple:
+    """Sort parallel [R, T] (or [T]) arrays by the leading ``num_keys``
+    operands, each row independently.  T must be a power of two."""
+    if interpret is None:
+        interpret = _is_cpu()
+    squeeze = operands[0].ndim == 1
+    if squeeze:
+        operands = tuple(o[None, :] for o in operands)
+    out = _k.bitonic_pallas(operands, num_keys, interpret=interpret)
+    if squeeze:
+        out = tuple(o[0] for o in out)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("full_width", "interpret"))
+def sort_pairs_tpu(groups, keys, *, full_width: bool = True,
+                   interpret: bool | None = None):
+    """(group, key) tuple sort with automatic power-of-two padding —
+    kernel-backed equivalent of :func:`repro.core.sorter.sort_pairs`."""
+    n = groups.shape[-1]
+    m = _sorter.next_pow2(n)
+    if m != n:
+        pad_g = jnp.full(groups.shape[:-1] + (m - n,),
+                         jnp.iinfo(jnp.int32).max, groups.dtype)
+        pad_k = jnp.zeros(keys.shape[:-1] + (m - n,), keys.dtype)
+        groups = jnp.concatenate([groups, pad_g], axis=-1)
+        keys = jnp.concatenate([keys, pad_k], axis=-1)
+    g, k = bitonic_sort_tpu((groups, keys), num_keys=2 if full_width else 1,
+                            interpret=interpret)
+    return g[..., :n], k[..., :n]

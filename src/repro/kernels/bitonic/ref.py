@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the bitonic kernel: jax.lax.sort (XLA's sorter)."""
+from __future__ import annotations
+
+import jax
+
+
+def sort_ref(operands: tuple, num_keys: int = 1) -> tuple:
+    return tuple(jax.lax.sort(tuple(operands), dimension=-1,
+                              num_keys=num_keys, is_stable=True))

@@ -1,0 +1,154 @@
+"""In-tile primitives shared by the Pallas kernels.
+
+These are pure ``jnp`` functions over VMEM-resident values, written so they
+lower to Mosaic-friendly vector ops:
+
+  * **no gathers / scatters** — the reverse butterfly becomes log2(T) rounds
+    of static shift + select (the literal dataflow of the hardware network);
+    the bitonic network uses the reshape-pair trick (partner lanes become an
+    adjacent axis) instead of ``x[idx ^ j]`` gathers;
+  * static shapes and static loop bounds only (unrolled at trace time, like
+    the fixed wiring of the FPGA design);
+  * combiner states are tuples of same-length arrays (struct-of-arrays).
+
+Everything here is also valid outside Pallas and is reused by the reference
+implementations for cross-checking.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combiners import Combiner
+
+Array = jax.Array
+
+
+def _shift_right(x: Array, d: int, fill) -> Array:
+    """x[i] <- x[i-d] along the last axis (static d), front-filled."""
+    pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)
+    return jnp.concatenate([pad, x[..., :-d]], axis=-1)
+
+
+def _shift_left(x: Array, d: int, fill) -> Array:
+    """x[i] <- x[i+d] along the last axis (static d), back-filled."""
+    pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)
+    return jnp.concatenate([x[..., d:], pad], axis=-1)
+
+
+def tile_segmented_scan(flags: Array, state: Any, combiner: Combiner) -> Any:
+    """Inclusive segmented scan across the last axis of every state leaf.
+
+    Hillis–Steele: log2(T) rounds of (shift, combine, select) — the software
+    unrolling of the PRRA's prefix-scan entity network (entities ``n``).
+
+    Requires ``flags[..., 0] == True`` (a well-formed segment labelling always
+    starts a segment at lane 0), which keeps the shifted-in fill values dead.
+    """
+    t = flags.shape[-1]
+    assert t & (t - 1) == 0, f"tile length must be a power of two, got {t}"
+    f = flags
+    s = state
+    d = 1
+    while d < t:
+        prev_s = jax.tree.map(lambda x: _shift_right(x, d, 0), s)
+        prev_f = _shift_right(f, d, True)  # out-of-range counts as boundary
+        merged = combiner.op(prev_s, s)
+        s = jax.tree.map(lambda m, x: jnp.where(f, x, m), merged, s)
+        f = f | prev_f
+        d *= 2
+    return s
+
+
+def butterfly_compact(valid: Array, arrays: tuple[Array, ...],
+                      fills: tuple[Any, ...]) -> tuple[tuple[Array, ...], Array]:
+    """Dense left-compaction of ``valid`` lanes — the reverse butterfly.
+
+    Each valid element's destination is its rank (exclusive prefix-sum of
+    ``valid``); the required displacement ``d = i - rank(i)`` is monotone
+    non-decreasing, so routing one displacement bit per round (LSB first,
+    static shifts of 1, 2, 4, ...) is collision-free — the textbook property
+    the PRRA's reverse butterfly exploits, with wires replaced by vector
+    shifts.
+
+    Returns (compacted arrays with invalid tail filled, count of valid lanes).
+    """
+    t = valid.shape[-1]
+    assert t & (t - 1) == 0
+    rank = jnp.cumsum(valid.astype(jnp.int32), axis=-1) - valid.astype(jnp.int32)
+    disp = jnp.where(valid, jnp.arange(t, dtype=jnp.int32) - rank, 0)
+    count = jnp.sum(valid.astype(jnp.int32), axis=-1, keepdims=True)
+
+    arrs = arrays
+    v = valid
+    b = 1
+    while b < t:
+        in_arrs = tuple(_shift_left(a, b, fl) for a, fl in zip(arrs, fills))
+        in_disp = _shift_left(disp, b, 0)
+        in_v = _shift_left(v, b, False)
+        arrive = in_v & ((in_disp & b) != 0)
+        stay = v & ((disp & b) == 0)
+        arrs = tuple(jnp.where(arrive, ia, a) for ia, a in zip(in_arrs, arrs))
+        disp = jnp.where(arrive, in_disp - b, disp)
+        v = arrive | stay
+        b *= 2
+    arrs = tuple(jnp.where(v, a, jnp.full_like(a, fl))
+                 for a, fl in zip(arrs, fills))
+    return arrs, count
+
+
+def bitonic_sort_tile(operands: tuple[Array, ...], num_keys: int
+                      ) -> tuple[Array, ...]:
+    """Bitonic sort along the last axis via the reshape-pair trick.
+
+    For stage (k, j) the partner of lane ``p`` is ``p ^ j``; viewing the axis
+    as ``[..., T/(2j), 2, j]`` puts partners adjacent on the middle axis, so
+    the compare-exchange is a pure select — no gather, vreg-shuffle friendly.
+    """
+    t = operands[0].shape[-1]
+    assert t & (t - 1) == 0
+    lead = operands[0].shape[:-1]
+
+    k = 2
+    while k <= t:
+        j = k // 2
+        while j >= 1:
+            m = t // (2 * j)
+            # ascending iff bit k of the element index is 0; constant per pair row
+            up = ((jnp.arange(m, dtype=jnp.int32) * 2 * j) & k) == 0
+            up = up.reshape((1,) * len(lead) + (m, 1))
+
+            def reshaped(x):
+                return x.reshape(lead + (m, 2, j))
+
+            ops_r = tuple(reshaped(x) for x in operands)
+            a = tuple(x[..., 0, :] for x in ops_r)   # lower position
+            b = tuple(x[..., 1, :] for x in ops_r)   # higher position
+            b_less = _lex_less(b[:num_keys], a[:num_keys])
+            a_less = _lex_less(a[:num_keys], b[:num_keys])
+            swap = jnp.where(up, b_less, a_less)
+            new_a = tuple(jnp.where(swap, y, x) for x, y in zip(a, b))
+            new_b = tuple(jnp.where(swap, x, y) for x, y in zip(a, b))
+            operands = tuple(
+                jnp.stack([x, y], axis=-2).reshape(lead + (t,))
+                for x, y in zip(new_a, new_b))
+            j //= 2
+        k *= 2
+    return operands
+
+
+def _lex_less(a: tuple[Array, ...], b: tuple[Array, ...]) -> Array:
+    less = jnp.zeros(a[0].shape, bool)
+    eq = jnp.ones(a[0].shape, bool)
+    for x, y in zip(a, b):
+        less = less | (eq & (x < y))
+        eq = eq & (x == y)
+    return less
+
+
+def state_fills(combiner: Combiner, key_dtype) -> tuple[Any, ...]:
+    """Per-leaf fill values (the combiner identity) for compaction padding."""
+    ident = combiner.identity((), key_dtype)
+    return tuple(jax.tree.leaves(ident))

@@ -1,0 +1,1 @@
+from repro.kernels.groupagg.ops import group_by_aggregate_tpu  # noqa: F401

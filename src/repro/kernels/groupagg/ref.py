@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused engine kernel: the core reference engine."""
+from __future__ import annotations
+
+from repro.core import engine as _core
+
+
+def group_by_aggregate_ref(groups, keys, op="sum", *, n_valid=None):
+    return _core.group_by_aggregate(groups, keys, op, n_valid=n_valid)

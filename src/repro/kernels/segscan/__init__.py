@@ -1,0 +1,1 @@
+from repro.kernels.segscan.ops import segmented_scan_tpu  # noqa: F401

@@ -1,0 +1,49 @@
+"""jit'd public wrapper for the segmented-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combiners import Combiner, get_combiner
+from repro.kernels.segscan import kernel as _k
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile", "interpret"))
+def segmented_scan_tpu(flags, state, op="sum", *, tile: int = 1024,
+                       interpret: bool | None = None):
+    """Segmented inclusive scan of a combiner-state pytree along axis -1.
+
+    Drop-in for :func:`repro.core.segscan.segmented_scan` (1-D inputs), backed
+    by the Pallas kernel.  ``interpret=None`` auto-selects interpret mode on
+    CPU (the validation path mandated for this container) and compiled Mosaic
+    on TPU.
+    """
+    combiner = op if isinstance(op, Combiner) else get_combiner(op)
+    if interpret is None:
+        interpret = _is_cpu()
+
+    leaves = jax.tree.leaves(state)
+    treedef = jax.tree.structure(state)
+    n = leaves[0].shape[-1]
+    pad = (-n) % tile
+    if pad:
+        # padded lanes start their own (garbage) segments; outputs are sliced off
+        flags_p = jnp.concatenate(
+            [flags, jnp.ones((pad,), flags.dtype)], axis=-1)
+        leaves_p = [jnp.concatenate([l, jnp.zeros((pad,), l.dtype)], axis=-1)
+                    for l in leaves]
+    else:
+        flags_p, leaves_p = flags, leaves
+
+    flags2 = flags_p.astype(jnp.int32)[None, :]
+    leaves2 = tuple(l[None, :] for l in leaves_p)
+    out = _k.segscan_pallas(flags2, leaves2, combiner, tile=tile,
+                            interpret=interpret)
+    out = [o[0, :n] for o in out]
+    return jax.tree.unflatten(treedef, out)

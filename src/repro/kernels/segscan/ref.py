@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the segscan kernel: log-depth associative scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import segscan as _core
+from repro.core.combiners import Combiner, get_combiner
+
+
+def segmented_scan_ref(flags, state, op="sum"):
+    combiner = op if isinstance(op, Combiner) else get_combiner(op)
+    return _core.segmented_scan(flags.astype(bool), state, combiner)

@@ -1,0 +1,1 @@
+from repro.kernels.swag.ops import swag_tpu  # noqa: F401

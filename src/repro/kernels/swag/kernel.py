@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused sliding-window aggregation (paper Fig. 4).
+
+One grid row per window; per window, entirely in VMEM:
+
+    bitonic sort by (group, key)  ->  5-step engine  ->  compacted results
+
+This is the paper's SWAG pipeline collapsed into a single kernel: "offload
+the design complexity to small-scale sorting, while benefiting from the
+efficiency of the proposed aggregation engine".  Windows are <= 4K tuples in
+the paper's target queries — comfortably VMEM-resident.
+
+Median (the paper's non-incremental example) is fused too: after the sort,
+the group cardinality is broadcast *backwards* through the run with a
+reversed max-segscan (the paper's "append the cardinality alongside the
+data"), and the median lane is selected where
+``rank == (cardinality - 1) // 2``; compaction then collects exactly one
+lane per group.  No hash sets, no worst-case sizing — the paper's pitch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.combiners import Combiner, get_combiner
+from repro.core.engine import PAD_GROUP
+from repro.kernels import common
+
+
+def _engine_in_tile(g, k, combiner: Combiner):
+    """Non-rolling 5-step engine over one closed, sorted window."""
+    sentinel = jnp.iinfo(jnp.int32).min
+    starts = g != common._shift_right(g, 1, sentinel)
+    ends = g != common._shift_left(g, 1, sentinel)  # window is closed: last lane ends
+    state = combiner.lift(k)
+    scanned = common.tile_segmented_scan(starts, state, combiner)
+    values = combiner.finalize(scanned)
+    emit = ends & (g != PAD_GROUP)
+    (cg, cv), cnt = common.butterfly_compact(
+        emit, (g, values), (PAD_GROUP, jnp.zeros((), values.dtype)))
+    return cg, cv, cnt
+
+
+def _median_in_tile(g, k):
+    """Lower median per group over one closed, (group,key)-sorted window."""
+    sentinel = jnp.iinfo(jnp.int32).min
+    starts = g != common._shift_right(g, 1, sentinel)
+    ends = g != common._shift_left(g, 1, sentinel)
+
+    count = get_combiner("count")
+    ranks = common.tile_segmented_scan(starts, count.lift(k), count)  # 1-based
+    card_at_end = jnp.where(ends, ranks, 0)
+
+    # broadcast cardinality backwards: reversed max-segscan seeded at run ends
+    g_rev = jnp.flip(g, axis=-1)
+    card_rev = jnp.flip(card_at_end, axis=-1)
+    starts_rev = g_rev != common._shift_right(g_rev, 1, sentinel)
+    mx = get_combiner("max")
+    card_bcast = jnp.flip(
+        common.tile_segmented_scan(starts_rev, card_rev, mx), axis=-1)
+
+    is_med = (ranks - 1) == (card_bcast - 1) // 2
+    emit = is_med & (g != PAD_GROUP)
+    (cg, cv), cnt = common.butterfly_compact(
+        emit, (g, k), (PAD_GROUP, jnp.zeros((), k.dtype)))
+    return cg, cv, cnt
+
+
+def _kernel(g_ref, k_ref, og_ref, ov_ref, oc_ref, *, combiner, median: bool):
+    g = g_ref[0, :]
+    k = k_ref[0, :]
+    # (window buffer has already framed WS/WA; sort = the paper's small sorter)
+    g, k = common.bitonic_sort_tile((g, k), num_keys=2)
+    if median:
+        cg, cv, cnt = _median_in_tile(g, k)
+    else:
+        cg, cv, cnt = _engine_in_tile(g, k, combiner)
+    og_ref[0, :] = cg
+    ov_ref[0, :] = cv
+    oc_ref[0, 0] = cnt[0]
+
+
+def swag_pallas(frames_g, frames_k, op: str, *, interpret: bool):
+    """frames_*: [NW, WS] framed windows, WS a power of two."""
+    nw, ws = frames_g.shape
+    median = op == "median"
+    combiner = None if median else get_combiner(op)
+    if median:
+        out_dtype = frames_k.dtype
+    else:
+        out_dtype = jax.eval_shape(
+            lambda x: combiner.finalize(combiner.lift(x)), frames_k).dtype
+
+    kern = functools.partial(_kernel, combiner=combiner, median=median)
+    block = pl.BlockSpec((1, ws), lambda i: (i, 0))
+    cnt_block = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    og, ov, oc = pl.pallas_call(
+        kern,
+        grid=(nw,),
+        in_specs=[block, block],
+        out_specs=[block, block, cnt_block],
+        out_shape=[
+            jax.ShapeDtypeStruct((nw, ws), jnp.int32),
+            jax.ShapeDtypeStruct((nw, ws), out_dtype),
+            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(frames_g, frames_k)
+    return og, ov, oc[:, 0]

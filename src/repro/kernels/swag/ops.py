@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the fused SWAG kernel."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import PAD_GROUP
+from repro.core.swag import frame_windows
+
+
+class SwagResult(NamedTuple):
+    groups: jax.Array   # [NW, WS]
+    values: jax.Array   # [NW, WS]
+    valid: jax.Array    # [NW, WS]
+    num_groups: jax.Array  # [NW]
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ws", "wa", "op", "interpret"))
+def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
+             interpret: bool | None = None) -> SwagResult:
+    """Sliding-window aggregate: last ``ws`` tuples per group, advance ``wa``.
+
+    ``op`` may be any registered combiner name or ``"median"`` (the paper's
+    non-incremental showcase).  WS must be a power of two (pad otherwise).
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    if ws & (ws - 1):
+        raise ValueError(f"WS must be a power of two, got {ws}")
+    from repro.kernels.swag import kernel as _k
+
+    fg = frame_windows(groups.astype(jnp.int32), ws, wa)
+    fk = frame_windows(keys, ws, wa)
+    og, ov, oc = _k.swag_pallas(fg, fk, op, interpret=interpret)
+    valid = jnp.arange(ws)[None, :] < oc[:, None]
+    og = jnp.where(valid, og, PAD_GROUP)
+    return SwagResult(og, ov, valid, oc)

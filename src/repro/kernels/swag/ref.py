@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SWAG kernel: core swag / swag_median."""
+from __future__ import annotations
+
+from repro.core.swag import swag as _swag
+from repro.core.swag import swag_median as _swag_median
+
+
+def swag_ref(groups, keys, *, ws: int, wa: int, op="sum"):
+    if op == "median":
+        m = _swag_median(groups, keys, ws=ws, wa=wa, use_xla_sort=True)
+        return m.groups, m.medians, m.valid, m.num_groups
+    r = _swag(groups, keys, ws=ws, wa=wa, op=op, use_xla_sort=True)
+    return r.groups, r.values, r.valid, r.num_groups

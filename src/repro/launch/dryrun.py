@@ -1,0 +1,308 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+THIS FILE MUST SET XLA_FLAGS BEFORE ANY OTHER IMPORT — jax locks the device
+count at first init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import shape_applicable
+from repro.distributed import sharding as SH
+from repro.distributed import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.optim import OptimizerConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+#: per-arch gradient-accumulation defaults for train_4k so activations fit
+#: 16 GB/chip (derived from memory_analysis; see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES = {
+    "arctic-480b": 8,
+    "mixtral-8x7b": 4,
+    "granite-3-8b": 4,
+    "chatglm3-6b": 4,
+    "llama-3.2-vision-11b": 4,
+    "qwen1.5-4b": 2,
+    "whisper-medium": 2,
+    "internlm2-1.8b": 2,
+    "rwkv6-1.6b": 2,
+    "zamba2-1.2b": 2,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO.
+
+    Operand shapes are parsed from each op line: ``x = TYPE[dims]{layout}
+    collective-op(...)`` — we count the op's OUTPUT shape bytes (for
+    all-gather/all-reduce this equals the communicated payload per device up
+    to the algorithm factor; the roofline applies the standard ring factors).
+    """
+    sizes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+        "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2}
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    # e.g.:  %ag = bf16[4096,1024]{1,0} all-gather(...)
+    shape_re = re.compile(
+        r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = None
+        for coll in _COLLECTIVES:
+            # match op name at the callsite, not inside operand lists
+            if re.search(rf"\b{coll}(?:-start|-done)?\(", stripped):
+                m = coll
+                break
+        if m is None:
+            continue
+        if f"{m}-done(" in stripped:
+            continue  # -done carries no new payload; counted at -start
+        sm = shape_re.search(stripped)
+        if not sm:
+            continue
+        dtype, dims = sm.group(1), sm.group(2)
+        if dtype not in sizes:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[m]["bytes"] += n * sizes[dtype]
+        out[m]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def depth_period(cfg) -> int:
+    """Smallest depth that tiles the arch's layer pattern (cost probes)."""
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        return cfg.shared_attn_every
+    if cfg.cross_attn_every:
+        return cfg.cross_attn_every
+    return 1
+
+
+def _lower_one(cfg, shape, scheme, opt_cfg, *, remat, microbatches,
+               unroll: int = 1, acc_dtype: str = "float32"):
+    """Lower + compile one step function for (cfg, shape) on scheme.mesh."""
+    params_abs = ST.abstract_params(cfg)
+    p_shard = SH.param_shardings(params_abs, cfg, scheme)
+    mesh = scheme.mesh
+    with mesh:
+        if shape.kind == "train":
+            opt_abs = ST.abstract_opt_state(cfg, opt_cfg)
+            o_spec = SH.opt_state_specs(opt_abs, params_abs, cfg, scheme)
+            o_shard = jax.tree.map(
+                lambda s: scheme.named(s), o_spec,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            batch = ST.train_input_specs(cfg, shape.seq_len,
+                                         shape.global_batch)
+            bspecs = SH.batch_specs(scheme)
+            b_shard = {k: scheme.named(bspecs[k]) for k in batch}
+            step, ctx = ST.make_train_step(cfg, opt_cfg, scheme, remat=remat,
+                                           microbatches=microbatches,
+                                           acc_dtype=acc_dtype)
+            ctx.scan_unroll = unroll
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1)).lower(params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            batch = ST.train_input_specs(cfg, shape.seq_len,
+                                         shape.global_batch)
+            batch.pop("labels"), batch.pop("loss_mask")
+            bspecs = SH.batch_specs(scheme)
+            b_shard = {k: scheme.named(bspecs[k]) for k in batch}
+            step, ctx = ST.make_prefill_step(cfg, scheme)
+            ctx.scan_unroll = unroll
+            lowered = jax.jit(step, in_shardings=(p_shard, b_shard)).lower(
+                params_abs, batch)
+        else:  # decode
+            state_abs = ST.decode_state_specs_abstract(
+                cfg, shape.global_batch, shape.seq_len)
+            s_spec = SH.decode_state_specs(state_abs, cfg, scheme)
+            s_shard = jax.tree.map(
+                lambda s: scheme.named(s), s_spec,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            t_shard = scheme.named(
+                jax.sharding.PartitionSpec(scheme.dp_spec()))
+            step, ctx = ST.make_decode_step(cfg, scheme)
+            ctx.scan_unroll = unroll
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, t_shard, s_shard),
+                donate_argnums=(2,)).lower(params_abs, token, state_abs)
+        return lowered.compile()
+
+
+def _cost_record(compiled) -> dict:
+    try:
+        cost = {k: float(v) for k, v in dict(compiled.cost_analysis()).items()
+                if isinstance(v, (int, float)) and "{" not in k}
+    except Exception as e:
+        cost = {"error": str(e)}
+    hlo = compiled.as_text()
+    return {"cost": cost, "collectives": collective_bytes(hlo),
+            "hlo_bytes": len(hlo)}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               remat: str = "dots", microbatches: int = 1,
+               sp: bool = False, zero_pods: bool = True,
+               cost_probes: bool = True, extra_tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    shard_batch = shape.global_batch % dp_size == 0 \
+        and shape.global_batch >= dp_size
+    scheme = SH.make_scheme(mesh, sp=sp, shard_batch=shard_batch,
+                            zero_across_pods=zero_pods)
+    # arctic-480b at 10 B/param cannot fit 256x16 GB; bf16 moments + in-place
+    # bf16 params (no fp32 master) + bf16 grad accumulation is the standard
+    # compromise at this chips-per-param ratio (EXPERIMENTS.md §Dry-run)
+    big = arch == "arctic-480b"
+    opt_cfg = (OptimizerConfig(moment_dtype="bfloat16", master_dtype="none")
+               if big else OptimizerConfig())
+    acc_dtype = "bfloat16" if big else "float32"
+
+    # --- phase 1: FULL config, scan-over-layers: the compile proof +
+    # memory analysis (buffer assignment sees the true trip counts) ---
+    t0 = time.time()
+    compiled = _lower_one(cfg, shape, scheme, opt_cfg, remat=remat,
+                          microbatches=microbatches, acc_dtype=acc_dtype)
+    t1 = time.time()
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    full = _cost_record(compiled)
+    del compiled
+
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "compile_s": round(t1 - t0, 2),
+        "mesh": dict(mesh.shape), "remat": remat, "sp": sp,
+        "microbatches": microbatches, "shard_batch": shard_batch,
+        "memory": mem_info, "cost": full["cost"],
+        "collectives": full["collectives"], "hlo_bytes": full["hlo_bytes"],
+        "num_layers": cfg.num_layers,
+        "tag": extra_tag,
+    }
+
+    # --- phase 2: two shallow UNROLLED compiles (depth P and 2P) so flops /
+    # bytes / collective counts can be extrapolated affinely in depth (XLA's
+    # HloCostAnalysis counts while-loop bodies once; see roofline.py) ---
+    if cost_probes:
+        p = depth_period(cfg)
+        probes = {}
+        for depth in (p, 2 * p):
+            small = dataclasses.replace(
+                cfg, num_layers=depth,
+                encoder_layers=depth if cfg.is_encoder_decoder else
+                cfg.encoder_layers)
+            c = _lower_one(small, shape, scheme, opt_cfg, remat=remat,
+                           microbatches=microbatches, unroll=max(2 * p, 2),
+                           acc_dtype=acc_dtype)
+            probes[str(depth)] = _cost_record(c)
+            del c
+        record["cost_probes"] = probes
+        record["probe_depths"] = [p, 2 * p]
+    return record
+
+
+def cell_filename(arch: str, shape: str, multi_pod: bool,
+                  tag: str = "") -> str:
+    pod = "pod2" if multi_pod else "pod1"
+    suffix = f"_{tag}" if tag else ""
+    return f"{arch}__{shape}__{pod}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = per-arch default for train shapes")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} x {shape} x {'2pods' if mp else '1pod'}"
+                mb = args.microbatches or (
+                    TRAIN_MICROBATCHES.get(arch, 2)
+                    if SHAPES[shape].kind == "train" else 1)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     remat=args.remat, sp=args.sp,
+                                     microbatches=mb,
+                                     extra_tag=args.tag)
+                except Exception:
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error",
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                path = os.path.join(
+                    args.out, cell_filename(arch, shape, mp, args.tag))
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    fl = rec["cost"].get("flops")
+                    extra = (f" flops={fl:.3e}" if fl else "") + \
+                        f" compile={rec['compile_s']}s"
+                elif status == "skipped":
+                    extra = " " + rec["reason"]
+                print(f"[{status:7s}] {label}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

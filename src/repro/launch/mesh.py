@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions, not module constants — importing this module never touches jax
+device state (required so the 512-device dry-run env var can be set first by
+the entry point).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods of 256
+    = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)}; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 (see dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_local_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over available devices — smoke tests / examples on CPU."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,267 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``experiments/dryrun/*.json`` and derives the three per-device roofline
+terms for TPU v5e:
+
+    compute    = HLO_FLOPs / peak            (197 TFLOP/s bf16 per chip)
+    memory     = HLO_bytes / HBM_bw          (819 GB/s)
+    collective = collective_bytes / link_bw  (~50 GB/s/link ICI)
+
+HLO cost analysis counts while-loop bodies once, so FLOPs / bytes /
+collective bytes come from the two shallow *unrolled* cost probes (depth P
+and 2P), extrapolated affinely to the full depth L:
+
+    X(L) = X(P) + (L - P) / P * (X(2P) - X(P))
+
+then multiplied by the gradient-accumulation factor for train cells (the
+microbatch loop is also a scan).  Memory fit comes from the full-depth scan
+compile (its buffer assignment sees real trip counts).
+
+MODEL_FLOPS uses 6·N·tokens (train), 2·N·tokens (prefill), 2·N·batch
+(decode), with N = active params (MoE experts scaled by k/E).  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute and dispatch overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+HBM_PER_CHIP = 16e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def active_params(arch: str) -> dict:
+    """Parameter accounting from the abstract tree: total, active (MoE
+    experts scaled by k/E), encoder, head, embed."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.distributed import steps as ST
+    cfg = get_config(arch)
+    params = ST.abstract_params(cfg)
+    out = {"total": 0, "active": 0, "encoder": 0, "head": 0, "embed": 0}
+    frac = (cfg.num_experts_per_tok / cfg.num_experts
+            if cfg.num_experts else 1.0)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", "")))
+                       for p in path)
+        n = int(leaf.size)
+        out["total"] += n
+        out["active"] += int(n * frac) if "/moe/w_" in key else n
+        if key.startswith("encoder/"):
+            out["encoder"] += n
+        if key.startswith("lm_head"):
+            out["head"] += n
+        if key.startswith("embed"):
+            out["embed"] += n
+    return out
+
+
+def model_flops_global(arch: str, shape, p: dict | None = None) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train / 2·N·D inference, refined for
+    (a) prefill computing last-token-only logits, (b) whisper's encoder
+    running at encoder_seq not decoder seq, (c) embedding gathers being
+    table lookups, not matmuls."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if p is None:
+        p = active_params(arch)
+    dec_active = p["active"] - p["encoder"] - p["embed"]
+    tokens = shape.seq_len * shape.global_batch
+    enc_tokens = (cfg.encoder_seq * shape.global_batch
+                  if cfg.is_encoder_decoder else 0)
+    if shape.kind == "train":
+        return (6 * dec_active * tokens + 6 * p["encoder"] * enc_tokens)
+    if shape.kind == "prefill":
+        # last-token-only head
+        return (2 * (dec_active - p["head"]) * tokens
+                + 2 * p["head"] * shape.global_batch
+                + 2 * p["encoder"] * enc_tokens)
+    # decode: one token per sequence; SSM/attention state reads are the
+    # memory term, not compute
+    return 2 * dec_active * shape.global_batch
+
+
+def analytic_memory_bytes(arch: str, shape, rec: dict, p: dict) -> float:
+    """Dtype-faithful per-device HBM-traffic model (TPU projection).
+
+    The CPU backend emulates bf16 via f32 converts and fuses less than
+    Mosaic/TPU, so HLO 'bytes accessed' systematically over-counts (measured
+    ~2x + convert noise; see EXPERIMENTS.md §Roofline).  This model counts
+    the irreducible traffic of the step at true dtypes:
+
+      train:   params(bf16) read fwd + read bwd + grad write
+               + optimizer state read+write (+master r/w)
+               + activation stack (remat=full: layer inputs) write+read
+               + attention/scan working set streamed per layer
+      prefill: params read + activations streamed
+      decode:  params read + KV-cache/SSM-state read (the decode wall)
+    """
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    layers = cfg.num_layers + (cfg.encoder_layers
+                               if cfg.is_encoder_decoder else 0)
+    n_active = p["active"]
+    n_total = p["total"]
+    mb = rec.get("microbatches", 1)
+
+    d = cfg.d_model
+    tokens_dev = shape.seq_len * shape.global_batch / chips
+    act_bytes = 2  # bf16
+
+    if shape.kind == "train":
+        # weights: bf16 read fwd + read bwd per microbatch, grad write once;
+        # optimizer state read+write (bytes/param depend on the dtype recipe)
+        w_stream = 2 * n_active * (2 * mb + 1)
+        opt = n_total * (6 if "arctic" in arch else 12)
+        # remat=full: layer-input stack written + read back, per microbatch
+        act_stack = 2 * layers * tokens_dev * d * act_bytes * mb
+        # streamed per-layer working set (qkv/mlp/scan intermediates),
+        # ~6 hidden-sized tensors fwd + 2x that across bwd recompute
+        stream = 6 * layers * tokens_dev * d * act_bytes * mb * 3
+        return (w_stream + opt) / chips + act_stack + stream
+    if shape.kind == "prefill":
+        return 2 * n_active / chips + 8 * layers * tokens_dev * d * act_bytes
+    # decode
+    batch_dev = shape.global_batch / chips
+    if cfg.family in ("ssm", "hybrid"):
+        state_bytes = layers * batch_dev * d * 64 * 4  # S [H,Dk,Dv] fp32-ish
+    else:
+        cache_len = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        state_bytes = (2 * layers * batch_dev * cache_len
+                       * cfg.num_kv_heads * cfg.resolved_head_dim * 2)
+    return 2 * n_active / chips + state_bytes
+
+
+def extrapolate(rec: dict, field_fn) -> float | None:
+    """Affine depth extrapolation of a probe metric; x microbatches."""
+    probes = rec.get("cost_probes")
+    if not probes:
+        return None
+    p, p2 = rec["probe_depths"]
+    a = field_fn(probes[str(p)])
+    b = field_fn(probes[str(p2)])
+    if a is None or b is None:
+        return None
+    layers = rec["num_layers"]
+    full = a + (layers - p) / p * (b - a)
+    return full * rec.get("microbatches", 1)
+
+
+def analyze(rec: dict, *, cache: dict | None = None) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    flops = extrapolate(rec, lambda r: r["cost"].get("flops"))
+    bytes_ = extrapolate(rec, lambda r: r["cost"].get("bytes accessed"))
+    coll = extrapolate(rec, lambda r: r["collectives"]["total_bytes"])
+    if flops is None:
+        flops = rec["cost"].get("flops")
+        bytes_ = rec["cost"].get("bytes accessed")
+        coll = rec["collectives"]["total_bytes"]
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW if bytes_ else 0.0
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    cache = cache if cache is not None else {}
+    if rec["arch"] not in cache:
+        cache[rec["arch"]] = active_params(rec["arch"])
+    pinfo = cache[rec["arch"]]
+    total_n, active_n = pinfo["total"], pinfo["active"]
+
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    from repro.configs import SHAPES
+    shape = SHAPES[rec["shape"]]
+    model_flops_dev = model_flops_global(rec["arch"], shape, pinfo) / chips
+
+    bound = max(terms.values())
+    step_time = bound  # roofline lower bound on step time
+    mfu = model_flops_dev / PEAK_FLOPS / step_time if step_time else 0.0
+
+    # TPU-projected terms: dtype-faithful analytic memory (the CPU backend
+    # f32-emulates bf16, inflating HLO bytes ~2x + convert noise)
+    t_mem_proj = analytic_memory_bytes(rec["arch"], shape, rec,
+                                       pinfo) / HBM_BW
+    bound_proj = max(t_comp, t_mem_proj, t_coll)
+    mfu_proj = model_flops_dev / PEAK_FLOPS / bound_proj if bound_proj else 0.0
+
+    temp = rec["memory"].get("temp_bytes") or 0
+    args = rec["memory"].get("argument_bytes") or 0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+        "chips": chips,
+        "tag": rec.get("tag", ""),
+        "flops_dev": flops, "bytes_dev": bytes_, "coll_dev": coll,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": model_flops_dev,
+        "useful_ratio": model_flops_dev / flops if flops else 0.0,
+        "roofline_frac": mfu,
+        "t_memory_proj_s": t_mem_proj,
+        "roofline_frac_proj": mfu_proj,
+        "hbm_temp_gb": temp / 1e9, "hbm_args_gb": args / 1e9,
+        "fits_hbm": (temp + args) <= HBM_PER_CHIP,
+        "total_params": total_n, "active_params": active_n,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--tag", default="", help="only analyze records with tag")
+    ap.add_argument("--pod", default="pod1", choices=["pod1", "pod2", "all"])
+    args = ap.parse_args()
+
+    cache: dict = {}
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if args.pod != "all":
+            want_mp = args.pod == "pod2"
+            if rec.get("multi_pod") != want_mp:
+                continue
+        if rec.get("tag", "") != args.tag:
+            continue
+        row = analyze(rec, cache=cache)
+        if row:
+            rows.append(row)
+
+    cols = ["arch", "shape", "chips", "dominant", "t_compute_s", "t_memory_s",
+            "t_collective_s", "t_memory_proj_s", "roofline_frac",
+            "roofline_frac_proj", "useful_ratio", "hbm_temp_gb", "fits_hbm"]
+    fmt = {"t_compute_s": "{:.4f}", "t_memory_s": "{:.4f}",
+           "t_collective_s": "{:.4f}", "t_memory_proj_s": "{:.4f}",
+           "roofline_frac": "{:.3f}", "roofline_frac_proj": "{:.3f}",
+           "useful_ratio": "{:.3f}", "hbm_temp_gb": "{:.2f}"}
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(fmt.get(c, "{}").format(r[c]) for c in cols))
+
+    if args.csv:
+        import csv as _csv
+        with open(args.csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Serving launcher: batched decode with KV caches / SSM states.
+
+Demonstrates the serve path end-to-end on CPU with a reduced config:
+prompts are prefilled token-by-token through the decode step (semantically
+exact; the fused prefill projection is a dry-run/roofline concern), then
+batched generation runs at one token per step for the whole batch.
+
+Run: PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
+    --reduced --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed import sharding as SH
+from repro.distributed import steps as ST
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as MDL
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = make_local_mesh((jax.device_count(), 1))
+    scheme = SH.make_scheme(
+        mesh, shard_batch=args.batch % mesh.shape["data"] == 0)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = MDL.init_model(key, cfg)
+    max_len = args.prompt_len + args.gen
+    dt = jnp.dtype(cfg.dtype)
+
+    memory = None
+    if cfg.is_encoder_decoder:
+        enc_in = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model), dt)
+        memory = MDL.encode(params, cfg, enc_in)
+    elif cfg.cross_attn_every:
+        memory = jnp.zeros((args.batch, cfg.num_image_tokens, cfg.d_model), dt)
+
+    state = MDL.init_decode_state(params, cfg, args.batch, max_len,
+                                  memory=memory)
+    if memory is not None:
+        state = MDL.precompute_cross_kv(params, cfg, state, memory)
+
+    step_fn, _ = ST.make_decode_step(cfg, scheme)
+    jstep = jax.jit(step_fn, donate_argnums=(2,))
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    with mesh:
+        # prefill (token-by-token through the decode path)
+        t0 = time.time()
+        logits = None
+        for t in range(args.prompt_len):
+            logits, state = jstep(params, jnp.asarray(prompts[:, t]), state)
+        prefill_s = time.time() - t0
+
+        # batched generation
+        out = []
+        t0 = time.time()
+        gen_key = key
+        for _ in range(args.gen):
+            lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
+            if args.temperature > 0:
+                gen_key, sub = jax.random.split(gen_key)
+                tok = jax.random.categorical(sub, lg / args.temperature,
+                                             axis=-1)
+            else:
+                tok = jnp.argmax(lg, axis=-1)
+            tok = tok.astype(jnp.int32)
+            out.append(np.asarray(tok))
+            logits, state = jstep(params, tok, state)
+        gen_s = time.time() - t0
+
+    gen_tokens = np.stack(out, axis=1)
+    tput = args.batch * args.gen / gen_s
+    print(f"[serve] {args.arch}: prefill {args.prompt_len} tok x "
+          f"{args.batch} reqs in {prefill_s:.2f}s; generated "
+          f"{args.gen} tok/req at {tput:.1f} tok/s aggregate")
+    print("[serve] sample continuation:", gen_tokens[0, :16].tolist())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""LM model stack for the assigned architectures.
+
+Pure-functional: every layer is ``apply(params, x, ...)`` with params as
+plain dict pytrees; ``model.py`` assembles blocks into runs of homogeneous
+layer types (lax.scan within a run — HLO size independent of depth, which
+keeps 512-device dry-run compiles tractable).
+"""

@@ -1,0 +1,229 @@
+"""Attention: GQA/MHA, causal / bidirectional / sliding-window, cross-attn,
+KV caches (dense + ring buffer for SWA), block-chunked prefill.
+
+Conventions:
+  x           [B, T, D]
+  q           [B, T, H, Dh]           (H = num query heads)
+  k, v        [B, S, Hkv, Dh]         (GQA: H = Hkv * G)
+  KV cache    {"k": [B, Smax, Hkv, Dh], "v": ..., "len": int32 scalar}
+
+GQA is computed with grouped einsums (KV never repeated to H — keeps decode
+memory traffic at the true KV-cache size, which is what the decode roofline
+is made of).  Softmax in fp32.  Prefill runs in query blocks (lax.scan) so
+32k×32k score matrices are never materialized; the sliding-window path slices
+only the [window + block] key span per query block, making SWA prefill
+O(T·W) — this is what lets mixtral take the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as P
+
+Array = jax.Array
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, num_heads: int, num_kv: int,
+                   head_dim: int, dtype, *, qkv_bias: bool = False,
+                   out_scale: float | None = None):
+    ks = P.split_keys(key, 4)
+    p = {
+        "wq": P.dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": P.dense_init(ks[1], d_model, num_kv * head_dim, dtype),
+        "wv": P.dense_init(ks[2], d_model, num_kv * head_dim, dtype),
+        "wo": P.dense_init(ks[3], num_heads * head_dim, d_model, dtype,
+                           scale=out_scale),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv * head_dim,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# qkv projection + rope
+# --------------------------------------------------------------------------
+
+def project_qkv(params, xq: Array, xkv: Array, *, num_heads: int, num_kv: int,
+                head_dim: int, positions_q: Array | None,
+                positions_kv: Array | None, rotary_dim: int,
+                rope_theta: float):
+    b, tq, _ = xq.shape
+    tkv = xkv.shape[1]
+    q = xq @ params["wq"]
+    k = xkv @ params["wk"]
+    v = xkv @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, tq, num_heads, head_dim)
+    k = k.reshape(b, tkv, num_kv, head_dim)
+    v = v.reshape(b, tkv, num_kv, head_dim)
+    if rotary_dim:
+        if positions_q is not None:
+            sin, cos = L.rope_angles(positions_q, rotary_dim, rope_theta)
+            q = L.apply_rope(q, sin, cos, rotary_dim)
+        if positions_kv is not None:
+            sin, cos = L.rope_angles(positions_kv, rotary_dim, rope_theta)
+            k = L.apply_rope(k, sin, cos, rotary_dim)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# core attention (grouped, blocked over queries)
+# --------------------------------------------------------------------------
+
+def _attend_block(q: Array, k: Array, v: Array, bias: Array | None) -> Array:
+    """q [B,Tq,Hkv,G,Dh], k/v [B,S,Hkv,Dh], bias [Tq,S] or None -> [B,Tq,Hkv,G,Dh]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _mask_bias(mode: str, q_pos: Array, k_pos: Array, window: int) -> Array | None:
+    """[Tq, S] additive bias; q_pos/k_pos absolute positions (int32)."""
+    if mode == "full":
+        return None
+    d = q_pos[:, None] - k_pos[None, :]
+    allowed = d >= 0
+    if mode == "swa":
+        allowed = allowed & (d < window)
+    return jnp.where(allowed, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend(q: Array, k: Array, v: Array, *, mode: str = "causal",
+           window: int = 0, q_positions: Array | None = None,
+           k_positions: Array | None = None, q_block: int = 0) -> Array:
+    """Grouped-query attention, scanned over query blocks.
+
+    mode: "causal" | "full" | "swa" (requires ``window``).
+    Positions default to aligned arange (self-attention at offset 0).
+    ``q_block=0`` auto-sizes so fp32 score blocks stay ~VMEM-scale even at
+    32k keys.
+    """
+    b, tq, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    if q_block == 0:
+        q_block = 1024 if s <= 8192 else 256
+    if tq % q_block:
+        # largest divisor of tq not above q_block (whisper's 1500 frames);
+        # fall back to one block when tq is awkwardly prime-ish
+        d = q_block
+        while d > 64 and tq % d:
+            d -= 1
+        q_block = d if tq % d == 0 else tq
+    qg = q.reshape(b, tq, hkv, g, dh)
+    if q_positions is None:
+        q_positions = jnp.arange(tq, dtype=jnp.int32)
+    if k_positions is None:
+        k_positions = jnp.arange(s, dtype=jnp.int32)
+
+    if tq <= q_block:
+        bias = _mask_bias(mode, q_positions, k_positions, window)
+        out = _attend_block(qg, k, v, bias)
+        return out.reshape(b, tq, h, dh)
+
+    nblk = tq // q_block
+    qb = qg.reshape(b, nblk, q_block, hkv, g, dh)
+    pb = q_positions.reshape(nblk, q_block)
+
+    if mode == "swa" and window + q_block < s:
+        # slice only the live key span per query block: O(T * (W + blk))
+        span = _ceil_mult(window + q_block, 128)
+
+        def blk(carry, xs):
+            qi, pi, i = xs
+            start = jnp.clip(i * q_block + q_block - span, 0, s - span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kp = start + jnp.arange(span, dtype=jnp.int32)
+            bias = _mask_bias(mode, pi, kp, window)
+            return carry, _attend_block(qi, ks, vs, bias)
+
+        _, outs = jax.lax.scan(
+            blk, None,
+            (qb.swapaxes(0, 1), pb, jnp.arange(nblk, dtype=jnp.int32)))
+    else:
+        def blk(carry, xs):
+            qi, pi = xs
+            bias = _mask_bias(mode, pi, k_positions, window)
+            return carry, _attend_block(qi, k, v, bias)
+
+        _, outs = jax.lax.scan(blk, None, (qb.swapaxes(0, 1), pb))
+
+    out = outs.swapaxes(0, 1).reshape(b, tq, h, dh)
+    return out
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------------
+# KV cache
+# --------------------------------------------------------------------------
+
+def init_cache(batch: int, max_len: int, num_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv, head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_prefill(cache, k: Array, v: Array):
+    t = k.shape[1]
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1),
+        "len": jnp.asarray(t, jnp.int32),
+    }
+
+
+def cache_append(cache, k: Array, v: Array, *, ring: bool = False):
+    """Append one step (k/v [B, 1, Hkv, Dh]); ring=True wraps (SWA window)."""
+    smax = cache["k"].shape[1]
+    pos = cache["len"] % smax if ring else cache["len"]
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1),
+        "len": cache["len"] + 1,
+    }
+
+
+def decode_attend(q: Array, cache, *, mode: str = "causal",
+                  window: int = 0) -> Array:
+    """Single-step attention against the cache.  q [B, 1, H, Dh].
+
+    For ring caches every occupied slot is in-window by construction, so the
+    mask is just slot-occupancy; for dense caches it is ``slot < len``.
+    """
+    b, _, h, dh = q.shape
+    smax = cache["k"].shape[1]
+    hkv = cache["k"].shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, dh)
+    occupied = jnp.arange(smax, dtype=jnp.int32) < cache["len"]
+    bias = jnp.where(occupied, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    out = _attend_block(qg, cache["k"], cache["v"], bias)
+    return out.reshape(b, 1, h, dh)

@@ -1,0 +1,82 @@
+"""Norms, embeddings and rotary/positional machinery."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-5) -> Array:
+    # statistics in fp32; application in the input dtype — the reduce is the
+    # only fp32 tensor, so no [B,T,D]-wide fp32 traffic (§Perf Z2)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"]
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    mu = mu.astype(x.dtype)
+    return (x - mu) * inv * params["scale"] + params["bias"]
+
+
+def norm_init(kind: str, d: int, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind: str, params, x: Array) -> Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding (styles: standard, partial (chatglm), none)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: Array, rotary_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions [*, T] -> (sin, cos) of shape [*, T, rotary_dim/2], fp32."""
+    freqs = 1.0 / (theta ** (
+        jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array, rotary_dim: int) -> Array:
+    """x [..., T, H, Dh]; rotates the first ``rotary_dim`` features (pairwise
+    interleave-free "rotate half" convention); the tail passes through —
+    chatglm3's 2d-RoPE rotates only Dh/2."""
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = jnp.split(rot.astype(jnp.float32), 2, axis=-1)
+    # sin/cos [..., T, rd/2] -> broadcast over heads axis
+    s = sin[..., :, None, :]
+    c = cos[..., :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal table [n, d] (fp32)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / (half - 1))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,192 @@
+"""Chunked decaying linear-attention scan — the engine's rolling prefix scan
+reused as a sequence mixer (DESIGN.md §3.2).
+
+Computes, per head, the linear recurrence
+
+    S_t = Diag(w_t) S_{t-1} + k_t^T v_t              (w_t = exp(log_w_t) <= 1)
+    y_t = q_t S_{t-1} + (q_t . u . k_t) v_t          (exclusive + bonus: RWKV6)
+    y_t = q_t S_t                                    (inclusive: Mamba2/SSD)
+
+with the paper's two-level structure: a parallel *intra-chunk* form (the
+in-batch scan network) + a sequential *inter-chunk* carry of S (the rolling
+``n'`` state).  Chunking is exactly the engine's tile/carry split.
+
+Numerics: every exponential is exp(L_a - L_b) with a >= b and L
+non-increasing, so all exponents are <= 0 — no overflow is possible by
+construction, no decay clamping needed.  All decay math in fp32.
+
+Shapes: q,k [B,T,H,Dk], v [B,T,H,Dv], log_w [B,T,H,Dk] (broadcastable on the
+last axis — Mamba2 passes [B,T,H,1]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def chunked_decay_scan(q: Array, k: Array, v: Array, log_w: Array, *,
+                       bonus: Array | None = None, inclusive: bool = False,
+                       chunk: int = 32, initial_state: Array | None = None,
+                       return_state: bool = False):
+    """Returns y [B,T,H,Dv] (and final S [B,H,Dk,Dv] if return_state)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    if log_w.shape[-1] == 1:
+        log_w = jnp.broadcast_to(log_w, (b, t, h, dk))
+
+    pad = (-t) % chunk
+    if pad:
+        zq = jnp.zeros((b, pad, h, dk), q.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, jnp.zeros((b, pad, h, dk), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, h, dv), v.dtype)], axis=1)
+        log_w = jnp.concatenate(
+            [log_w, jnp.zeros((b, pad, h, dk), log_w.dtype)], axis=1)
+    tp = t + pad
+    nc = tp // chunk
+
+    def per_chunk(x, d):
+        return x.reshape(b, nc, chunk, h, d).swapaxes(0, 1)
+
+    qs, ks, vs = per_chunk(q, dk), per_chunk(k, dk), per_chunk(v, dv)
+    ws = per_chunk(log_w.astype(jnp.float32), dk)
+
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+           + (0 if inclusive else 1))
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(s, xs):
+        qc, kc, vc, wc = xs                     # [B, C, H, D*]
+        lw = jnp.cumsum(wc, axis=1)             # inclusive L within chunk
+        m = lw if inclusive else lw - wc        # exclusive uses L_{t-1}
+
+        # inter-chunk: contribution of the carried state
+        qd = qc.astype(jnp.float32) * jnp.exp(m)
+        y = jnp.einsum("bchd,bhdv->bchv", qd, s)
+
+        # intra-chunk: masked pairwise decays, all LIVE exponents <= 0.
+        # Mask inside the exp: exp at masked slots would overflow (expo>0)
+        # and 0*inf => NaN cotangents in the backward.
+        expo = m[:, :, None] - lw[:, None]      # [B, Ct, Cj, H, Dk]
+        expo = jnp.where(tri[None, :, :, None, None], expo, -jnp.inf)
+        dmat = jnp.exp(expo)
+        a = jnp.einsum("bthd,bjhd,btjhd->bthj",
+                       qc.astype(jnp.float32), kc.astype(jnp.float32), dmat)
+        y = y + jnp.einsum("bthj,bjhv->bthv", a, vc.astype(jnp.float32))
+
+        if bonus is not None:                   # RWKV6 u-bonus (current token)
+            coeff = jnp.sum(
+                qc.astype(jnp.float32) * bonus.astype(jnp.float32)
+                * kc.astype(jnp.float32), axis=-1, keepdims=True)
+            y = y + coeff * vc.astype(jnp.float32)
+
+        # carry update (the rolling n' state)
+        ltot = lw[:, -1]                        # [B, H, Dk]
+        kd = kc.astype(jnp.float32) * jnp.exp(ltot[:, None] - lw)
+        s_new = (jnp.exp(ltot)[..., None] * s
+                 + jnp.einsum("bchd,bchv->bhdv", kd, vc.astype(jnp.float32)))
+        return s_new, y
+
+    final_s, ys = jax.lax.scan(step, initial_state, (qs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(b, tp, h, dv)[:, :t].astype(v.dtype)
+    if return_state:
+        return y, final_s
+    return y
+
+
+def chunked_scalar_decay_scan(q: Array, k: Array, v: Array, log_w: Array, *,
+                              chunk: int = 32,
+                              initial_state: Array | None = None,
+                              return_state: bool = False):
+    """Scalar-per-head decay (Mamba2/SSD) fast path — §Perf Z1.
+
+    q, k [B,T,Dk] are SHARED across heads (SSD's ngroups=1) and the decay is
+    per-head scalar, so the pairwise intra-chunk term factorizes:
+
+        A[t,j,h] = (q_t . k_j) * exp(L_th - L_jh)
+
+    -> one shared [B,C,C] score matmul + a [B,C,C,H] decay tensor.  Nothing
+    of shape [B,T,H,Dk] is ever materialized (the generic path's dominant
+    HBM term, 64x larger for zamba2).  All exponents stay <= 0.
+
+    Shapes: log_w [B,T,H]; v [B,T,H,Dv]; returns y [B,T,H,Dv].
+    """
+    b, t, dk = q.shape
+    h = v.shape[2]
+    dv = v.shape[-1]
+
+    pad = (-t) % chunk
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((b, pad, dk), q.dtype)], axis=1)
+        k = jnp.concatenate([k, jnp.zeros((b, pad, dk), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, h, dv), v.dtype)], axis=1)
+        log_w = jnp.concatenate(
+            [log_w, jnp.zeros((b, pad, h), log_w.dtype)], axis=1)
+    tp = t + pad
+    nc = tp // chunk
+
+    qs = q.reshape(b, nc, chunk, dk).swapaxes(0, 1)
+    ks = k.reshape(b, nc, chunk, dk).swapaxes(0, 1)
+    vs = v.reshape(b, nc, chunk, h, dv).swapaxes(0, 1)
+    ws = log_w.astype(jnp.float32).reshape(b, nc, chunk, h).swapaxes(0, 1)
+
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(s, xs):
+        qc, kc, vc, wc = xs             # [B,C,Dk] [B,C,Dk] [B,C,H,Dv] [B,C,H]
+        lw = jnp.cumsum(wc, axis=1)     # [B,C,H] inclusive
+
+        # inter-chunk: project through the carry, THEN apply per-head decay
+        y = jnp.einsum("bcd,bhdv->bchv", qc.astype(jnp.float32), s)
+        y = y * jnp.exp(lw)[..., None]
+
+        # intra-chunk: shared scores x per-head pairwise decay.  Mask inside
+        # the exp (masked expo > 0 overflows; 0*inf => NaN in backward).
+        scores = jnp.einsum("btd,bjd->btj", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        expo = lw[:, :, None] - lw[:, None, :, :]        # [B,Ct,Cj,H]
+        expo = jnp.where(tri[None, :, :, None], expo, -jnp.inf)
+        dmat = jnp.exp(expo)
+        y = y + jnp.einsum("btj,btjh,bjhv->bthv", scores, dmat,
+                           vs_f32 := vc.astype(jnp.float32))
+
+        # carry: S' = exp(Ltot) S + sum_j k_j (x) (e^{Ltot-L_j} v_j)
+        ltot = lw[:, -1]                                  # [B,H]
+        wv = jnp.exp(ltot[:, None] - lw)[..., None] * vs_f32  # [B,C,H,Dv]
+        s_new = (jnp.exp(ltot)[..., None, None] * s
+                 + jnp.einsum("bjd,bjhv->bhdv", kc.astype(jnp.float32), wv))
+        return s_new, y
+
+    final_s, ys = jax.lax.scan(step, initial_state, (qs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(b, tp, h, dv)[:, :t].astype(v.dtype)
+    if return_state:
+        return y, final_s
+    return y
+
+
+def decay_scan_step(q: Array, k: Array, v: Array, log_w: Array, s: Array, *,
+                    bonus: Array | None = None, inclusive: bool = False):
+    """Single-token decode step.  q,k [B,H,Dk], v [B,H,Dv], s [B,H,Dk,Dv].
+
+    Returns (y [B,H,Dv], new_s)."""
+    if log_w.shape[-1] == 1:
+        log_w = jnp.broadcast_to(log_w, q.shape)
+    w = jnp.exp(log_w.astype(jnp.float32))
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    outer = k32[..., :, None] * v32[..., None, :]
+    if inclusive:
+        s_new = w[..., None] * s + outer
+        y = jnp.einsum("bhd,bhdv->bhv", q32, s_new)
+    else:
+        y = jnp.einsum("bhd,bhdv->bhv", q32, s)
+        if bonus is not None:
+            y = y + jnp.sum(q32 * bonus * k32, axis=-1, keepdims=True) * v32
+        s_new = w[..., None] * s + outer
+    return y.astype(v.dtype), s_new

@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) block — zamba2's backbone mixer, on the chunked rolling scan.
+
+SSD recurrence per head (scalar-decay special case of linear_scan):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t x_t^T)
+    y_t = C_t h_t + D . x_t
+
+mapped to chunked_decay_scan with q=C, k=B, v=dt*x, log_w = dt*A (scalar per
+head, broadcast over the state axis), inclusive=True.  Short depthwise causal
+conv (kernel 4) over the x/B/C channels, SiLU activations, gated RMSNorm
+before the output projection — the Mamba2 layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+from repro.models.linear_scan import chunked_scalar_decay_scan, decay_scan_step
+
+Array = jax.Array
+CONV_K = 4
+HEAD_DIM = 64
+
+
+def dims(d_model: int, ssm_state: int, expand: int = 2):
+    d_inner = expand * d_model
+    nheads = d_inner // HEAD_DIM
+    conv_dim = d_inner + 2 * ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba(key, d_model: int, ssm_state: int, dtype, *, expand: int = 2):
+    d_inner, nheads, conv_dim = dims(d_model, ssm_state, expand)
+    ks = P.split_keys(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": P.dense_init(
+            ks[0], d_model, 2 * d_inner + 2 * ssm_state + nheads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads, 1), jnp.float32),
+        "gn_scale": jnp.ones((d_inner,), dtype),
+        "w_out": P.dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _split_in(p, xz: Array, d_inner: int, ssm_state: int, nheads: int):
+    z, x, bmat, cmat, dt = jnp.split(
+        xz, [d_inner, 2 * d_inner, 2 * d_inner + ssm_state,
+             2 * d_inner + 2 * ssm_state], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(p, u: Array, prev: Array | None):
+    """Depthwise causal conv, kernel CONV_K.  u [B,T,C]; prev [B,K-1,C]."""
+    if prev is None:
+        prev = jnp.zeros(u.shape[:1] + (CONV_K - 1,) + u.shape[2:], u.dtype)
+    up = jnp.concatenate([prev, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * p["conv_w"][i]
+              for i in range(CONV_K)) + p["conv_b"]
+    # silu in input dtype (bf16 exp is fine at conv-activation scale)
+    return jax.nn.silu(out), up[:, -(CONV_K - 1):]
+
+
+def _gated_norm(p, y: Array, z: Array) -> Array:
+    yg = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(yg.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + 1e-5).astype(y.dtype)
+    return yg * inv * p["gn_scale"]
+
+
+def mamba_mix(p, x_in: Array, *, ssm_state: int, expand: int = 2,
+              state: dict | None = None, chunk: int = 16):
+    # chunk=16: the [B,C,C,H] intra term scales LINEARLY in C, so the
+    # smallest MXU-aligned chunk minimizes HBM traffic (§Perf Z3)
+    """Full-sequence Mamba2 mixing.  Returns (out [B,T,D], new_state)."""
+    b, t, d_model = x_in.shape
+    d_inner, nheads, conv_dim = dims(d_model, ssm_state, expand)
+    xz = x_in @ p["w_in"]
+    z, x, bmat, cmat, dt = _split_in(p, xz, d_inner, ssm_state, nheads)
+
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        p, conv_in, None if state is None else state["conv"])
+    x, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + ssm_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    a = -jnp.exp(p["a_log"])                                     # [H] < 0
+    log_w = dt * a                                               # [B,T,H]
+
+    xh = x.reshape(b, t, nheads, HEAD_DIM)
+    v = xh.astype(jnp.float32) * dt[..., None]                   # dt-scaled input
+    # q/k (C/B) are shared across heads (ngroups=1); the scalar-decay scan
+    # never materializes the head broadcast (§Perf Z1)
+    s0 = None if state is None else state["S"]
+    y, s_new = chunked_scalar_decay_scan(cmat, bmat, v.astype(x.dtype),
+                                         log_w, chunk=chunk,
+                                         initial_state=s0, return_state=True)
+    y = y.astype(jnp.float32) + p["d_skip"] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(x_in.dtype)
+    out = _gated_norm(p, y, z) @ p["w_out"]
+    new_state = {"conv": conv_state, "S": s_new}
+    return out, new_state
+
+
+def mamba_mix_step(p, x_in: Array, state: dict, *, ssm_state: int,
+                   expand: int = 2):
+    """Single-token decode.  x_in [B, D]."""
+    out, new_state = _mamba_step_impl(p, x_in, state, ssm_state, expand)
+    return out, new_state
+
+
+def _mamba_step_impl(p, x_in, state, ssm_state, expand):
+    b, d_model = x_in.shape
+    d_inner, nheads, conv_dim = dims(d_model, ssm_state, expand)
+    xz = x_in @ p["w_in"]
+    z, x, bmat, cmat, dt = _split_in(p, xz, d_inner, ssm_state, nheads)
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)[:, None]
+    conv_out, conv_state = _causal_conv(p, conv_in, state["conv"])
+    conv_out = conv_out[:, 0]
+    x, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    log_w = (dt * a)[..., None]
+    xh = x.reshape(b, nheads, HEAD_DIM)
+    v = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    q = jnp.broadcast_to(cmat[:, None, :], (b, nheads, ssm_state))
+    k = jnp.broadcast_to(bmat[:, None, :], (b, nheads, ssm_state))
+    y, s_new = decay_scan_step(q, k, v, log_w, state["S"], inclusive=True)
+    y = y.astype(jnp.float32) + p["d_skip"] * xh.astype(jnp.float32)
+    y = y.reshape(b, d_inner).astype(x_in.dtype)
+    out = _gated_norm(p, y[:, None], z[:, None])[:, 0] @ p["w_out"]
+    return out, {"conv": conv_state, "S": s_new}
+
+
+def init_mamba_state(batch: int, d_model: int, ssm_state: int, dtype, *,
+                     expand: int = 2):
+    d_inner, nheads, conv_dim = dims(d_model, ssm_state, expand)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "S": jnp.zeros((batch, nheads, ssm_state, HEAD_DIM), jnp.float32),
+    }

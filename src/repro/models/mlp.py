@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+
+Array = jax.Array
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype, *,
+             out_scale: float | None = None):
+    ks = P.split_keys(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": P.dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": P.dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": P.dense_init(ks[2], d_ff, d_model, dtype, scale=out_scale),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": P.dense_init(ks[0], d_model, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": P.dense_init(ks[1], d_ff, d_model, dtype, scale=out_scale),
+            "b_down": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def mlp(params, x: Array, kind: str) -> Array:
+    # activations in the compute dtype: bf16 silu/gelu is standard; keeping
+    # the [B,T,F] tensors narrow is a first-order HBM term (§Perf Z2)
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        up = x @ params["w_up"]
+        return (gate * up) @ params["w_down"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+        return h @ params["w_down"] + params["b_down"]
+    raise ValueError(kind)

@@ -1,0 +1,617 @@
+"""Model assembly: configs -> params -> train/prefill/decode computations.
+
+Layers are grouped into *runs* of identical type; within a run parameters are
+stacked [L_run, ...] and applied with ``lax.scan`` (HLO size independent of
+depth — essential for 512-device dry-run compiles).  Heterogeneous archs
+(zamba2's shared-attention cadence, llama-vision's cross-attn inserts,
+whisper's encoder/decoder) become short sequences of runs.
+
+Layer types:
+  dense        norm->GQA attn->res ; norm->MLP->res
+  moe          norm->GQA attn->res ; norm->MoE(+dense residual)->res
+  rwkv         norm->RWKV6 time mix->res ; norm->channel mix->res
+  mamba        norm->Mamba2 mix->res
+  mamba_shared mamba + the SHARED transformer block (zamba2 weight sharing)
+  enc          bidirectional attn + MLP (whisper encoder)
+  dec_cross    self attn + cross attn + MLP (whisper decoder)
+  dense_cross  gated cross-attn insert (llama-3.2-vision)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mlp as F
+from repro.models import moe as MOE
+from repro.models import params as P
+from repro.models import rwkv as R
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# sharding hook
+# --------------------------------------------------------------------------
+
+class ShardingCtx:
+    """Activation-sharding hook; launch code supplies real constraints."""
+
+    remat_policy: str = "none"   # none | dots | full
+
+    def constrain(self, x: Array, kind: str) -> Array:  # pragma: no cover
+        return x
+
+
+NULL_CTX = ShardingCtx()
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# layer plan
+# --------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> list[str]:
+    lt = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            lt.append("rwkv")
+        elif cfg.family == "hybrid":
+            if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+                lt.append("mamba_shared")
+            else:
+                lt.append("mamba")
+        elif cfg.family == "moe":
+            lt.append("moe")
+        elif cfg.is_encoder_decoder:
+            lt.append("dec_cross")
+        elif cfg.cross_attn_every and i % cfg.cross_attn_every == 3 % cfg.cross_attn_every:
+            lt.append("dense_cross")
+        else:
+            lt.append("dense")
+    return lt
+
+
+def layer_runs(cfg: ModelConfig) -> list[tuple[str, int]]:
+    runs: list[tuple[str, int]] = []
+    for t in layer_plan(cfg):
+        if runs and runs[-1][0] == t:
+            runs[-1] = (t, runs[-1][1] + 1)
+        else:
+            runs.append((t, 1))
+    return runs
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype):
+    hd = cfg.resolved_head_dim
+    out_scale = 0.02 / max(1, (2 * cfg.num_layers)) ** 0.5
+    ks = P.split_keys(key, 8)
+    d = cfg.d_model
+    if kind in ("dense", "enc"):
+        return {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "attn": A.init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                     hd, dtype, qkv_bias=cfg.qkv_bias,
+                                     out_scale=out_scale),
+            "ln2": L.norm_init(cfg.norm_kind, d, dtype),
+            "mlp": F.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_kind, dtype,
+                              out_scale=out_scale),
+        }
+    if kind == "moe":
+        p = {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "attn": A.init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                     hd, dtype, qkv_bias=cfg.qkv_bias,
+                                     out_scale=out_scale),
+            "ln2": L.norm_init(cfg.norm_kind, d, dtype),
+            "moe": MOE.init_moe(ks[1], d, cfg.d_ff, cfg.num_experts, dtype,
+                                mlp_kind=cfg.mlp_kind, out_scale=out_scale),
+        }
+        if cfg.moe_dense_residual:
+            p["dense_mlp"] = F.init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_kind,
+                                        dtype, out_scale=out_scale)
+        return p
+    if kind == "rwkv":
+        return {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "time": R.init_rwkv_time_mix(ks[0], d, cfg.d_ff, dtype),
+            "ln2": L.norm_init(cfg.norm_kind, d, dtype),
+            "chan": R.init_rwkv_channel_mix(ks[1], d, cfg.d_ff, dtype),
+        }
+    if kind in ("mamba", "mamba_shared"):
+        return {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "mix": M.init_mamba(ks[0], d, cfg.ssm_state, dtype),
+        }
+    if kind == "dec_cross":
+        return {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "attn": A.init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                     hd, dtype, out_scale=out_scale),
+            "ln2": L.norm_init(cfg.norm_kind, d, dtype),
+            "xattn": A.init_attention(ks[1], d, cfg.num_heads,
+                                      cfg.num_kv_heads, hd, dtype,
+                                      out_scale=out_scale),
+            "ln3": L.norm_init(cfg.norm_kind, d, dtype),
+            "mlp": F.init_mlp(ks[2], d, cfg.d_ff, cfg.mlp_kind, dtype,
+                              out_scale=out_scale),
+        }
+    if kind == "dense_cross":
+        return {
+            "ln1": L.norm_init(cfg.norm_kind, d, dtype),
+            "xattn": A.init_attention(ks[0], d, cfg.num_heads,
+                                      cfg.num_kv_heads, hd, dtype,
+                                      out_scale=out_scale),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "ln2": L.norm_init(cfg.norm_kind, d, dtype),
+            "mlp": F.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_kind, dtype,
+                              out_scale=out_scale),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = P.split_keys(key, 8)
+    params: dict[str, Any] = {
+        "embed": P.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": L.norm_init(cfg.norm_kind, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = P.dense_init(keys[1], cfg.d_model,
+                                         cfg.padded_vocab, dtype, scale=0.02)
+    rkey = keys[2]
+    runs = []
+    for kind, count in layer_runs(cfg):
+        lkeys = P.split_keys(rkey, count + 1)
+        rkey = lkeys[-1]
+        runs.append(P.stack_layers(
+            [_init_layer(k, cfg, kind, dtype) for k in lkeys[:count]]))
+    params["runs"] = runs
+
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_layer(keys[3], cfg, "dense", dtype)
+    if cfg.is_encoder_decoder:
+        ekeys = P.split_keys(keys[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "runs": [P.stack_layers(
+                [_init_layer(k, cfg, "enc", dtype) for k in ekeys])],
+            "final_norm": L.norm_init(cfg.norm_kind, cfg.d_model, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# block bodies (full-sequence)
+# --------------------------------------------------------------------------
+
+def _self_attn(p, cfg: ModelConfig, x, positions, mask_mode, ctx,
+               kv_override=None, return_kv=False):
+    hd = cfg.resolved_head_dim
+    rotary = {"standard": hd, "partial": hd // 2, "none": 0}[cfg.rope_style]
+    q, k, v = A.project_qkv(
+        p, x, x if kv_override is None else kv_override,
+        num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, head_dim=hd,
+        positions_q=positions, positions_kv=positions if rotary else None,
+        rotary_dim=rotary, rope_theta=cfg.rope_theta)
+    out = A.attend(q, k, v, mode=mask_mode, window=cfg.sliding_window,
+                   q_positions=positions, k_positions=positions)
+    out = ctx.constrain(out.reshape(x.shape[:2] + (-1,)), "attn_out")
+    y = out @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _cross_attn(p, cfg: ModelConfig, x, memory, ctx):
+    hd = cfg.resolved_head_dim
+    q, k, v = A.project_qkv(
+        p, x, memory, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+        head_dim=hd, positions_q=None, positions_kv=None,
+        rotary_dim=0, rope_theta=cfg.rope_theta)
+    out = A.attend(q, k, v, mode="full")
+    return out.reshape(x.shape[:2] + (-1,)) @ p["wo"]
+
+
+def _apply_block(kind: str, p, cfg: ModelConfig, x, *, positions, ctx,
+                 memory=None, shared=None, mask_mode="causal"):
+    """Full-sequence block application.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    nrm = functools.partial(L.apply_norm, cfg.norm_kind)
+
+    if kind in ("dense", "enc"):
+        mm = "full" if kind == "enc" else mask_mode
+        x = x + _self_attn(p["attn"], cfg, nrm(p["ln1"], x), positions, mm, ctx)
+        x = x + F.mlp(p["mlp"], nrm(p["ln2"], x), cfg.mlp_kind)
+        return x, aux
+
+    if kind == "moe":
+        x = x + _self_attn(p["attn"], cfg, nrm(p["ln1"], x), positions,
+                           mask_mode, ctx)
+        h = nrm(p["ln2"], x)
+        y, stats = MOE.moe_ffn(
+            p["moe"], h, num_experts=cfg.num_experts,
+            num_experts_per_tok=cfg.num_experts_per_tok,
+            capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_kind,
+            dispatch=cfg.moe_dispatch, ctx=ctx)
+        if cfg.moe_dense_residual:
+            y = y + F.mlp(p["dense_mlp"], h, cfg.mlp_kind)
+        x = x + y
+        return x, aux + stats.aux_loss
+
+    if kind == "rwkv":
+        y, _ = R.rwkv_time_mix(p["time"], nrm(p["ln1"], x))
+        x = x + y
+        y, _ = R.rwkv_channel_mix(p["chan"], nrm(p["ln2"], x))
+        x = x + y
+        return x, aux
+
+    if kind in ("mamba", "mamba_shared"):
+        y, _ = M.mamba_mix(p["mix"], nrm(p["ln1"], x), ssm_state=cfg.ssm_state)
+        x = x + y
+        if kind == "mamba_shared":
+            x, _ = _apply_block("dense", shared, cfg, x, positions=positions,
+                                ctx=ctx, mask_mode=mask_mode)
+        return x, aux
+
+    if kind == "dec_cross":
+        x = x + _self_attn(p["attn"], cfg, nrm(p["ln1"], x), positions,
+                           mask_mode, ctx)
+        x = x + _cross_attn(p["xattn"], cfg, nrm(p["ln2"], x), memory, ctx)
+        x = x + F.mlp(p["mlp"], nrm(p["ln3"], x), cfg.mlp_kind)
+        return x, aux
+
+    if kind == "dense_cross":
+        g_a = jnp.tanh(p["gate_attn"]).astype(x.dtype)
+        x = x + g_a * _cross_attn(p["xattn"], cfg, nrm(p["ln1"], x), memory, ctx)
+        g_m = jnp.tanh(p["gate_mlp"]).astype(x.dtype)
+        x = x + g_m * F.mlp(p["mlp"], nrm(p["ln2"], x), cfg.mlp_kind)
+        return x, aux
+
+    raise ValueError(kind)
+
+
+def _run_scan(run_params, kind: str, cfg: ModelConfig, x, *, positions, ctx,
+              memory=None, shared=None, mask_mode="causal"):
+    """lax.scan one run of stacked layers.  Returns (x, aux_sum)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h = ctx.constrain(h, "hidden")
+        h, a = _apply_block(kind, lp, cfg, h, positions=positions, ctx=ctx,
+                            memory=memory, shared=shared, mask_mode=mask_mode)
+        return (h, aux + a), None
+
+    body = _remat_wrap(body, getattr(ctx, "remat_policy", "none"))
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               run_params,
+                               unroll=getattr(ctx, "scan_unroll", 1))
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# full forward (train / prefill-style scoring)
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, encoder_embeds: Array,
+           ctx: ShardingCtx = NULL_CTX) -> Array:
+    """Whisper encoder over stub frame embeddings [B, Se, D]."""
+    se = encoder_embeds.shape[1]
+    x = encoder_embeds + L.sinusoidal_positions(
+        se, cfg.d_model).astype(encoder_embeds.dtype)
+    pos = jnp.arange(se, dtype=jnp.int32)
+    for run_p in params["encoder"]["runs"]:
+        x, _ = _run_scan(run_p, "enc", cfg, x, positions=pos, ctx=ctx,
+                         mask_mode="full")
+    return L.apply_norm(cfg.norm_kind, params["encoder"]["final_norm"], x)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens: Array, *,
+                   ctx: ShardingCtx = NULL_CTX, memory: Array | None = None,
+                   positions: Array | None = None) -> tuple[Array, Array]:
+    """tokens [B, T] -> (final-norm hidden [B, T, D], aux_loss).
+
+    ``memory``: encoder states (whisper) or image embeddings (vlm)."""
+    x = params["embed"][tokens]
+    x = ctx.constrain(x, "hidden")
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    if cfg.is_encoder_decoder:
+        x = x + L.sinusoidal_positions(
+            tokens.shape[1], cfg.d_model).astype(x.dtype)
+
+    mask_mode = "swa" if cfg.sliding_window else "causal"
+    aux = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+    for run_p, (kind, _) in zip(params["runs"], layer_runs(cfg)):
+        x, a = _run_scan(run_p, kind, cfg, x, positions=positions, ctx=ctx,
+                         memory=memory, shared=shared, mask_mode=mask_mode)
+        aux = aux + a
+
+    x = L.apply_norm(cfg.norm_kind, params["final_norm"], x)
+    return x, aux
+
+
+def lm_head(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, tokens: Array, *,
+            ctx: ShardingCtx = NULL_CTX, memory: Array | None = None,
+            positions: Array | None = None) -> tuple[Array, Array]:
+    """Full-logit forward (tests / small models).  Large-vocab training uses
+    the chunked CE below instead of materializing [B, T, V]."""
+    x, aux = forward_hidden(params, cfg, tokens, ctx=ctx, memory=memory,
+                            positions=positions)
+    logits = ctx.constrain(x @ lm_head(params, cfg), "logits")
+    return logits, aux
+
+
+def chunked_ce(x: Array, head: Array, labels: Array, mask: Array, *,
+               ctx: ShardingCtx = NULL_CTX, chunk: int = 512):
+    """Cross-entropy without materializing [B, T, V]: scan over T-chunks,
+    per-chunk logits live only inside the (rematerialized) chunk body.
+    Returns (ce_sum, zloss_sum) — caller normalizes."""
+    b, t, d = x.shape
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+    nb = t // c
+    xs = (x.reshape(b, nb, c, d).swapaxes(0, 1),
+          labels.reshape(b, nb, c).swapaxes(0, 1),
+          mask.reshape(b, nb, c).swapaxes(0, 1))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def blk(acc, xs):
+        xb, lb, mb = xs
+        logits = ctx.constrain(xb @ head, "logits")
+        lg32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg32, axis=-1)
+        ll = jnp.take_along_axis(lg32, lb[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - ll) * mb)
+        zz = jnp.sum(jnp.square(lse) * mb)
+        return (acc[0] + ce, acc[1] + zz), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(
+        blk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+    return ce_sum, z_sum
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardingCtx = NULL_CTX, aux_weight: float = 0.01,
+            z_weight: float = 1e-4, ce_chunk: int = 512) -> tuple[Array, dict]:
+    """Next-token CE (fp32 softmax, chunked) + MoE aux + z-loss."""
+    memory = batch.get("memory")
+    if cfg.is_encoder_decoder:
+        memory = encode(params, cfg, batch["encoder_embeds"], ctx)
+    x, aux = forward_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                            memory=memory)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    ce_sum, z_sum = chunked_ce(x, lm_head(params, cfg), labels, mask, ctx=ctx,
+                               chunk=ce_chunk)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = ce_sum / denom
+    zloss = z_sum / denom
+    total = ce + aux_weight * aux + z_weight * zloss
+    return total, {"ce": ce, "aux": aux, "zloss": zloss}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode with caches/states
+# --------------------------------------------------------------------------
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, max_len: int,
+                      *, memory: Array | None = None,
+                      ctx: ShardingCtx = NULL_CTX):
+    """Allocate per-layer caches/states, stacked per run.
+
+    For attention layers the cache length is min(max_len, window) — SWA decodes
+    against a ring buffer (this is what makes long_500k serveable for mixtral).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    cache_len = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+        else max_len
+    states = []
+    for kind, count in layer_runs(cfg):
+        def stk(mk):
+            return jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[mk() for _ in range(count)])
+        if kind in ("dense", "moe"):
+            states.append(stk(lambda: A.init_cache(
+                batch, cache_len, cfg.num_kv_heads, hd, dtype)))
+        elif kind == "rwkv":
+            states.append(stk(lambda: R.init_rwkv_state(
+                batch, cfg.d_model, dtype)))
+        elif kind == "mamba":
+            states.append(stk(lambda: M.init_mamba_state(
+                batch, cfg.d_model, cfg.ssm_state, dtype)))
+        elif kind == "mamba_shared":
+            states.append(stk(lambda: {
+                "ssm": M.init_mamba_state(batch, cfg.d_model, cfg.ssm_state,
+                                          dtype),
+                "kv": A.init_cache(batch, cache_len, cfg.num_kv_heads, hd,
+                                   dtype)}))
+        elif kind == "dec_cross":
+            states.append(stk(lambda: {
+                "kv": A.init_cache(batch, cache_len, cfg.num_kv_heads, hd,
+                                   dtype),
+                "cross": _cross_kv_placeholder(cfg, batch, memory, dtype)}))
+        elif kind == "dense_cross":
+            states.append(stk(lambda: {
+                "cross": _cross_kv_placeholder(cfg, batch, memory, dtype)}))
+        else:
+            raise ValueError(kind)
+    return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _cross_kv_placeholder(cfg, batch, memory, dtype):
+    hd = cfg.resolved_head_dim
+    t_mem = (cfg.encoder_seq if cfg.is_encoder_decoder
+             else cfg.num_image_tokens) if memory is None else memory.shape[1]
+    return {"k": jnp.zeros((batch, t_mem, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, t_mem, cfg.num_kv_heads, hd), dtype)}
+
+
+def precompute_cross_kv(params, cfg: ModelConfig, state, memory: Array):
+    """Fill per-layer cross-attention KV from encoder states / image embeds."""
+    hd = cfg.resolved_head_dim
+    new_layers = []
+    for run_p, st, (kind, count) in zip(params["runs"], state["layers"],
+                                        layer_runs(cfg)):
+        if kind not in ("dec_cross", "dense_cross"):
+            new_layers.append(st)
+            continue
+
+        def fill(lp, s):
+            k = (memory @ lp["xattn"]["wk"]).reshape(
+                memory.shape[0], memory.shape[1], cfg.num_kv_heads, hd)
+            v = (memory @ lp["xattn"]["wv"]).reshape(
+                memory.shape[0], memory.shape[1], cfg.num_kv_heads, hd)
+            s = dict(s)
+            s["cross"] = {"k": k, "v": v}
+            return s
+
+        new_layers.append(jax.vmap(fill)(run_p, st))
+    return {"layers": new_layers, "pos": state["pos"]}
+
+
+def _decode_self_attn(p, cfg: ModelConfig, x1, cache, pos, ring: bool):
+    hd = cfg.resolved_head_dim
+    rotary = {"standard": hd, "partial": hd // 2, "none": 0}[cfg.rope_style]
+    posq = pos[None] if pos.ndim == 0 else pos
+    q, k, v = A.project_qkv(
+        p, x1, x1, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+        head_dim=hd, positions_q=posq, positions_kv=posq if rotary else None,
+        rotary_dim=rotary, rope_theta=cfg.rope_theta)
+    cache = A.cache_append(cache, k, v, ring=ring)
+    out = A.decode_attend(q, cache, mode="causal")
+    return out.reshape(x1.shape[:2] + (-1,)) @ p["wo"], cache
+
+
+def _decode_cross_attn(p, cfg: ModelConfig, x1, cross):
+    hd = cfg.resolved_head_dim
+    b = x1.shape[0]
+    q = (x1 @ p["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, cfg.num_heads, hd)
+    cache = {"k": cross["k"], "v": cross["v"],
+             "len": jnp.asarray(cross["k"].shape[1], jnp.int32)}
+    out = A.decode_attend(q, cache, mode="full")
+    return out.reshape(b, 1, -1) @ p["wo"]
+
+
+def _decode_block(kind, p, cfg, x1, st, pos, shared, ring):
+    nrm = functools.partial(L.apply_norm, cfg.norm_kind)
+    if kind in ("dense", "moe"):
+        y, cache = _decode_self_attn(p["attn"], cfg, nrm(p["ln1"], x1),
+                                     st, pos, ring)
+        x1 = x1 + y
+        h = nrm(p["ln2"], x1)
+        if kind == "moe":
+            y, _ = MOE.moe_ffn(p["moe"], h, num_experts=cfg.num_experts,
+                               num_experts_per_tok=cfg.num_experts_per_tok,
+                               capacity_factor=2.0, mlp_kind=cfg.mlp_kind,
+                               dispatch=cfg.moe_dispatch)
+            if cfg.moe_dense_residual:
+                y = y + F.mlp(p["dense_mlp"], h, cfg.mlp_kind)
+        else:
+            y = F.mlp(p["mlp"], h, cfg.mlp_kind)
+        return x1 + y, cache
+    if kind == "rwkv":
+        x = x1[:, 0]
+        y, st1 = R.rwkv_time_mix_step(
+            p["time"], L.apply_norm(cfg.norm_kind, p["ln1"], x[:, None])[:, 0],
+            {"shift_t": st["shift_t"], "S": st["S"]})
+        x = x + y
+        y, st2 = R.rwkv_channel_mix_step(
+            p["chan"], L.apply_norm(cfg.norm_kind, p["ln2"], x[:, None])[:, 0],
+            {"shift_c": st["shift_c"]})
+        x = x + y
+        return x[:, None], {**st1, **st2}
+    if kind in ("mamba", "mamba_shared"):
+        ssm = st["ssm"] if kind == "mamba_shared" else st
+        x = x1[:, 0]
+        y, ssm = M.mamba_mix_step(
+            p["mix"], L.apply_norm(cfg.norm_kind, p["ln1"], x[:, None])[:, 0],
+            ssm, ssm_state=cfg.ssm_state)
+        x1 = (x + y)[:, None]
+        if kind == "mamba_shared":
+            y, cache = _decode_self_attn(
+                shared["attn"], cfg, L.apply_norm(cfg.norm_kind,
+                                                  shared["ln1"], x1),
+                st["kv"], pos, ring)
+            x1 = x1 + y
+            x1 = x1 + F.mlp(shared["mlp"],
+                            L.apply_norm(cfg.norm_kind, shared["ln2"], x1),
+                            cfg.mlp_kind)
+            return x1, {"ssm": ssm, "kv": cache}
+        return x1, ssm
+    if kind == "dec_cross":
+        y, cache = _decode_self_attn(p["attn"], cfg, nrm(p["ln1"], x1),
+                                     st["kv"], pos, ring)
+        x1 = x1 + y
+        x1 = x1 + _decode_cross_attn(p["xattn"], cfg, nrm(p["ln2"], x1),
+                                     st["cross"])
+        x1 = x1 + F.mlp(p["mlp"], nrm(p["ln3"], x1), cfg.mlp_kind)
+        return x1, {"kv": cache, "cross": st["cross"]}
+    if kind == "dense_cross":
+        g_a = jnp.tanh(p["gate_attn"]).astype(x1.dtype)
+        x1 = x1 + g_a * _decode_cross_attn(p["xattn"], cfg, nrm(p["ln1"], x1),
+                                           st["cross"])
+        g_m = jnp.tanh(p["gate_mlp"]).astype(x1.dtype)
+        x1 = x1 + g_m * F.mlp(p["mlp"], nrm(p["ln2"], x1), cfg.mlp_kind)
+        return x1, {"cross": st["cross"]}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, state, *,
+                ctx: ShardingCtx = NULL_CTX):
+    """One decode step.  token [B] int32 -> (logits [B, V], new state)."""
+    pos = state["pos"]
+    x = params["embed"][token][:, None, :]           # [B, 1, D]
+    if cfg.is_encoder_decoder:
+        x = x + L.sinusoidal_positions(1, cfg.d_model).astype(x.dtype)
+    x = ctx.constrain(x, "hidden_decode")
+    ring = cfg.sliding_window > 0
+    shared = params.get("shared_attn")
+
+    new_layers = []
+    for run_p, st, (kind, count) in zip(params["runs"], state["layers"],
+                                        layer_runs(cfg)):
+        def body(h, xs):
+            lp, s = xs
+            h = ctx.constrain(h, "hidden_decode")
+            h, s_new = _decode_block(kind, lp, cfg, h, s, pos, shared, ring)
+            return h, s_new
+        x, st_new = jax.lax.scan(body, x, (run_p, st))
+        new_layers.append(st_new)
+
+    x = L.apply_norm(cfg.norm_kind, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = ctx.constrain((x @ head)[:, 0], "logits_decode")
+    return logits, {"layers": new_layers, "pos": pos + 1}

@@ -1,0 +1,358 @@
+"""Mixture-of-Experts with SORT-BASED dispatch — the paper's engine as a
+framework feature (DESIGN.md §3.1).
+
+Token→expert routing *is* streaming group-by-aggregate: group id = expert id.
+The ``sorted`` dispatch path is the paper's pipeline end-to-end:
+
+  1. sort (expert_id, token) assignment tuples      -> core.sorter (FLiMS role)
+  2. rank-within-expert via segmented count scan    -> the engine's entities n
+  3. per-expert counts for aux loss / telemetry     -> group-by-aggregate count
+  4. capacity-clipped scatter into [E, C, D]        -> the compaction step (e)
+
+No hash tables, no data-dependent HBM walks: one sort + one linear pass,
+exactly the paper's pitch against hash-based grouping.  The ``onehot``
+baseline (GShard-style dense einsum masks) is the comparison point the
+benchmarks use.
+
+All gating math in fp32.  Works under EP sharding: the [E, C, D] dispatch
+buffer is what gets laid out across the expert axis of the mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import segscan
+from repro.core.combiners import get_combiner
+from repro.models import params as P
+from repro.models.mlp import init_mlp, mlp
+
+Array = jax.Array
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype, *,
+             mlp_kind: str = "swiglu", out_scale: float | None = None):
+    ks = P.split_keys(key, 4)
+    return {
+        "router": P.dense_init(ks[0], d_model, num_experts, dtype),
+        "w_gate": _expert_init(ks[1], num_experts, d_model, d_ff, dtype),
+        "w_up": _expert_init(ks[2], num_experts, d_model, d_ff, dtype),
+        "w_down": _expert_init(ks[3], num_experts, d_ff, d_model, dtype,
+                               scale=out_scale),
+    }
+
+
+def _expert_init(key, e, d_in, d_out, dtype, scale=None):
+    import math
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (e, d_in, d_out),
+                                    jnp.float32)
+    return (w * std).astype(dtype)
+
+
+class MoEStats(NamedTuple):
+    aux_loss: Array        # load-balance loss (Switch/GShard form)
+    expert_counts: Array   # [E] tokens routed per expert (pre-capacity)
+    dropped: Array         # fraction of assignments dropped by capacity
+
+
+def route(p, x: Array, num_experts_per_tok: int):
+    """Top-k routing.  x [N, D] -> (experts [N, k], gates [N, k] fp32)."""
+    logits = (x @ p["router"]).astype(jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_gates, top_experts = jax.lax.top_k(gates_all, num_experts_per_tok)
+    top_gates = top_gates / jnp.sum(top_gates, axis=-1, keepdims=True)
+    return top_experts.astype(jnp.int32), top_gates, gates_all
+
+
+def _aux_loss(gates_all: Array, experts: Array, num_experts: int) -> Array:
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    n = gates_all.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[
+        experts.reshape(-1)].add(1.0, mode="drop")
+    f = counts / jnp.maximum(n * experts.shape[-1], 1)
+    pmean = jnp.mean(gates_all, axis=0)
+    return num_experts * jnp.sum(f * pmean)
+
+
+def _expert_ffn(p, xe: Array, mlp_kind: str) -> Array:
+    """xe [E, C, D] -> [E, C, D] through per-expert FFN (batched einsum)."""
+    if mlp_kind == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        h = jax.nn.silu(gate) * up
+        return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_sorted(p, x: Array, *, num_experts: int, num_experts_per_tok: int,
+               capacity_factor: float = 1.25, mlp_kind: str = "swiglu",
+               constrain=None) -> tuple[Array, MoEStats]:
+    """Sort-based dispatch (the paper's engine).  x [N, D] -> [N, D].
+
+    ``constrain(x, kind)``: optional sharding hook for the dispatch buffers
+    (kinds: moe_xe / moe_ye / hidden_flat) — bounds GSPMD layouts when the
+    expert count doesn't tile the EP axis (mixtral's 8 experts on a 16-wide
+    data axis)."""
+    n, d = x.shape
+    k = num_experts_per_tok
+    na = n * k
+    capacity = _capacity(n, num_experts, k, capacity_factor)
+
+    experts, gates, gates_all = route(p, x, k)
+
+    # --- 1. sort the (expert, token) assignment stream (the FLiMS stage) ---
+    # Only integer operands go through the sort (its transpose rule must not
+    # be differentiated); float payloads are gathered by the permutation.
+    flat_e = experts.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_gate = gates.reshape(-1)
+    se, sperm = jax.lax.sort(
+        (flat_e, jnp.arange(na, dtype=jnp.int32)), dimension=0, num_keys=1,
+        is_stable=True)
+    stok = flat_tok[sperm]
+    sgate = flat_gate[sperm]
+
+    # --- 2. rank within expert group: segmented count scan (entities n) ---
+    starts = segscan.segment_starts(se)
+    cnt = get_combiner("count")
+    rank = segscan.segmented_scan(starts, cnt.lift(se), cnt) - 1  # 0-based
+
+    # --- 3. capacity clip + scatter into the [E, C, D] dispatch buffer ---
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + rank, num_experts * capacity)
+    xe = jnp.zeros((num_experts * capacity + 1, d), x.dtype).at[slot].set(
+        x[stok], mode="drop")[:-1].reshape(num_experts, capacity, d)
+    if constrain:
+        xe = constrain(xe, "moe_xe")
+
+    # --- expert FFN on the dense per-expert buffer ---
+    ye = _expert_ffn(p, xe, mlp_kind)
+    if constrain:
+        ye = constrain(ye, "moe_ye")
+
+    # --- 4. combine: weighted scatter-add back to token order (bf16: only
+    # top-k contributions per token; see §Perf A1) ---
+    yflat = ye.reshape(num_experts * capacity, d)
+    gate_w = (sgate * keep.astype(jnp.float32)).astype(yflat.dtype)
+    contrib = yflat[jnp.clip(slot, 0, num_experts * capacity - 1)] \
+        * gate_w[:, None]
+    y = jnp.zeros((n, d), yflat.dtype).at[stok].add(contrib, mode="drop")
+    if constrain:
+        y = constrain(y, "hidden_flat")
+
+    stats = MoEStats(
+        aux_loss=_aux_loss(gates_all, experts, num_experts),
+        expert_counts=jnp.zeros((num_experts,), jnp.int32).at[flat_e].add(
+            1, mode="drop"),
+        dropped=1.0 - jnp.mean(keep.astype(jnp.float32)),
+    )
+    return y.astype(x.dtype), stats
+
+
+def moe_onehot(p, x: Array, *, num_experts: int, num_experts_per_tok: int,
+               capacity_factor: float = 1.25, mlp_kind: str = "swiglu"
+               ) -> tuple[Array, MoEStats]:
+    """GShard-style dense one-hot dispatch — the non-sorted baseline the
+    paper's approach is measured against."""
+    n, d = x.shape
+    k = num_experts_per_tok
+    capacity = _capacity(n, num_experts, k, capacity_factor)
+    experts, gates, gates_all = route(p, x, k)
+
+    onehot = jax.nn.one_hot(experts, num_experts, dtype=jnp.float32)  # [N,k,E]
+    # position within expert via cumulative sum over tokens (dense O(N*E))
+    pos = jnp.cumsum(onehot.reshape(n * k, num_experts), axis=0).reshape(
+        n, k, num_experts) * onehot - 1.0
+    keep = (pos < capacity) & (pos >= 0)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)                          # [N,k,E,C]
+    dispatch = jnp.einsum("nke,nkec->nec", onehot, pos_oh)           # [N,E,C]
+    combine = jnp.einsum("nk,nke,nkec->nec", gates, onehot, pos_oh)
+
+    xe = jnp.einsum("nd,nec->ecd", x.astype(jnp.float32), dispatch)
+    ye = _expert_ffn(p, xe.astype(x.dtype), mlp_kind)
+    y = jnp.einsum("ecd,nec->nd", ye.astype(jnp.float32), combine)
+
+    stats = MoEStats(
+        aux_loss=_aux_loss(gates_all, experts, num_experts),
+        expert_counts=jnp.sum(onehot, axis=(0, 1)).astype(jnp.int32),
+        dropped=1.0 - jnp.mean(jnp.sum(keep, axis=-1) > 0),
+    )
+    return y.astype(x.dtype), stats
+
+
+def moe_sorted_ep(p, x: Array, *, num_experts: int, num_experts_per_tok: int,
+                  capacity_factor: float, mlp_kind: str, scheme
+                  ) -> tuple[Array, MoEStats]:
+    """Expert-parallel sort-based dispatch under shard_map.
+
+    This is the engine's pipeline running *per shard*, exactly the paper's
+    multi-engine arrangement: each data shard sorts its own token stream by
+    expert id (local FLiMS + segmented-count scan), builds per-expert send
+    buffers, and one ``all_to_all`` on the data axis moves tokens to their
+    expert's shard.  Experts live on the ``data`` axis; expert FFN hidden is
+    TP over ``model`` with a ``psum`` to rebuild D.  Cross-pod traffic: none
+    (experts replicated per pod, DP across pods).
+
+    When E < |data| (mixtral: 8 experts, 16 shards), each expert is cloned
+    into r = |data|/E VIRTUAL experts and a token's replica is picked by its
+    within-expert rank parity (rank % r) — perfectly balanced, no re-sort
+    needed because rank//r preserves order (§Perf M1).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = scheme.mesh
+    ep_axis = "data"
+    ep = mesh.shape[ep_axis]
+    tp_axis = scheme.tp if scheme.tp else None
+    n, d = x.shape
+    k = num_experts_per_tok
+    r = ep // num_experts if num_experts < ep else 1
+    n_virtual = num_experts * r
+    e_loc = n_virtual // ep
+    dp_axes = scheme.dp_spec()
+
+    n_loc = n // scheme.axis_size(scheme.dp) if dp_axes else n
+    cap_send = max(8, int(n_loc * k * capacity_factor / n_virtual))
+    cap_send = ((cap_send + 7) // 8) * 8
+
+    def local(x_blk, router, w_gate, w_up, w_down):
+        nl = x_blk.shape[0]
+        experts, gates, gates_all = route({"router": router}, x_blk, k)
+
+        # --- local engine pass: sort + segmented rank (paper pipeline) ---
+        flat_e = experts.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(nl, dtype=jnp.int32), k)
+        flat_gate = gates.reshape(-1)
+        se, sperm = jax.lax.sort(
+            (flat_e, jnp.arange(nl * k, dtype=jnp.int32)), dimension=0,
+            num_keys=1, is_stable=True)
+        stok = flat_tok[sperm]
+        sgate = flat_gate[sperm]
+        starts = segscan.segment_starts(se)
+        cnt = get_combiner("count")
+        rank = segscan.segmented_scan(starts, cnt.lift(se), cnt) - 1
+        if r > 1:  # virtual-expert replica by rank parity; order preserved
+            se = se * r + rank % r
+            rank = rank // r
+        keep = rank < cap_send
+        slot = jnp.where(keep, se * cap_send + rank,
+                         n_virtual * cap_send)
+
+        send = jnp.zeros((n_virtual * cap_send + 1, d), x_blk.dtype).at[
+            slot].set(x_blk[stok], mode="drop")[:-1]
+        send = send.reshape(ep, e_loc * cap_send, d)
+
+        # --- all_to_all: tokens -> expert shards (data axis) ---
+        # (a 4D no-transpose layout was tried and REFUTED: XLA re-introduces
+        # the copies inside the batched einsum; see EXPERIMENTS.md §Perf A2)
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        recv = recv.reshape(ep, e_loc, cap_send, d).swapaxes(0, 1).reshape(
+            e_loc, ep * cap_send, d)
+
+        # --- expert FFN (hidden TP over model, psum rebuilds D) ---
+        if mlp_kind == "swiglu":
+            gate_h = jnp.einsum("ecd,edf->ecf", recv, w_gate)
+            up = jnp.einsum("ecd,edf->ecf", recv, w_up)
+            h = jax.nn.silu(gate_h) * up
+        else:
+            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", recv, w_up))
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down)
+        if tp_axis:
+            ye = jax.lax.psum(ye, tp_axis)
+
+        # --- reverse all_to_all + weighted combine ---
+        # combine stays in bf16: each token sums only top-k (=2) expert
+        # contributions, so bf16 accumulation is exact to ~3 ulp; keeping
+        # the [*, D] tensors narrow halves dispatch HBM traffic (§Perf A1)
+        back = ye.reshape(e_loc, ep, cap_send, d).swapaxes(0, 1).reshape(
+            ep, e_loc * cap_send, d)
+        got = jax.lax.all_to_all(back, ep_axis, split_axis=0, concat_axis=0,
+                                 tiled=False).reshape(
+            n_virtual * cap_send, d)
+        gate_w = (sgate * keep.astype(jnp.float32)).astype(got.dtype)
+        contrib = got[jnp.clip(slot, 0, n_virtual * cap_send - 1)] \
+            * gate_w[:, None]
+        y = jnp.zeros((nl, d), got.dtype).at[stok].add(
+            contrib, mode="drop")
+
+        counts = jnp.zeros((num_experts,), jnp.int32).at[flat_e].add(
+            1, mode="drop")
+        aux = _aux_loss(gates_all, experts, num_experts)
+        dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        return y.astype(x_blk.dtype), aux[None], counts[None], dropped[None]
+
+    axes = tuple(mesh.axis_names)
+    x_spec = P(dp_axes, None)
+    ep_w_in = P(ep_axis, None, tp_axis)    # [E, D, F]
+    ep_w_out = P(ep_axis, tp_axis, None)   # [E, F, D]
+    stat_spec = P(*(axes,))                # per-shard stats, stacked
+
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if r > 1:
+        # clone each expert into r virtual replicas laid out on the EP axis
+        w_gate = jnp.repeat(w_gate, r, axis=0)
+        w_up = jnp.repeat(w_up, r, axis=0)
+        w_down = jnp.repeat(w_down, r, axis=0)
+
+    y, aux, counts, dropped = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, P(None, None), ep_w_in, ep_w_in, ep_w_out),
+        out_specs=(x_spec, stat_spec, stat_spec, stat_spec),
+        check_vma=False,
+    )(x, p["router"], w_gate, w_up, w_down)
+
+    tp_size = mesh.shape[scheme.tp] if scheme.tp else 1
+    stats = MoEStats(
+        aux_loss=jnp.mean(aux),
+        expert_counts=jnp.sum(counts, axis=0) // tp_size,  # model ranks dup
+        dropped=jnp.mean(dropped),
+    )
+    return y, stats
+
+
+def moe_ffn(p, x: Array, *, num_experts: int, num_experts_per_tok: int,
+            capacity_factor: float = 1.25, mlp_kind: str = "swiglu",
+            dispatch: str = "sorted", ctx=None) -> tuple[Array, MoEStats]:
+    """x [B, T, D] -> (y [B, T, D], stats).  dispatch: "sorted" | "onehot".
+
+    With a mesh-bound ctx and E divisible by the data axis, the sorted path
+    upgrades to the shard_map expert-parallel engine (moe_sorted_ep)."""
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    scheme = getattr(ctx, "s", None)
+    ep_size = scheme.axis_size(scheme.ep) if (scheme and scheme.ep) else 0
+    ep_ok = ep_size and (num_experts % ep_size == 0
+                         or ep_size % num_experts == 0)  # virtual replicas
+    if (dispatch == "sorted" and scheme is not None and ep_ok
+            and scheme.shard_batch
+            and (b * t) % scheme.axis_size(scheme.dp) == 0):
+        y, stats = moe_sorted_ep(
+            p, xf, num_experts=num_experts,
+            num_experts_per_tok=num_experts_per_tok,
+            capacity_factor=capacity_factor, mlp_kind=mlp_kind,
+            scheme=scheme)
+        return y.reshape(b, t, d), stats
+    constrain = ctx.constrain if (ctx is not None and scheme is not None) \
+        else None
+    if dispatch == "sorted":
+        y, stats = moe_sorted(p, xf, num_experts=num_experts,
+                              num_experts_per_tok=num_experts_per_tok,
+                              capacity_factor=capacity_factor,
+                              mlp_kind=mlp_kind, constrain=constrain)
+    else:
+        y, stats = moe_onehot(p, xf, num_experts=num_experts,
+                              num_experts_per_tok=num_experts_per_tok,
+                              capacity_factor=capacity_factor,
+                              mlp_kind=mlp_kind)
+    return y.reshape(b, t, d), stats
+
+
+def _capacity(n: int, num_experts: int, k: int, factor: float) -> int:
+    cap = int(n * k * factor / num_experts)
+    return max(8, ((cap + 7) // 8) * 8)

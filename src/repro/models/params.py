@@ -1,0 +1,45 @@
+"""Parameter initialization + tree utilities (no flax — plain dict pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of arrays
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    """Truncated-normal fan-in init (std = scale or 1/sqrt(d_in))."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+    return (w * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+    return (w * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def stack_layers(layer_params: list[Params]) -> Params:
+    """Stack per-layer trees into [L, ...] leaves for lax.scan consumption."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

@@ -1,0 +1,177 @@
+"""RWKV6 ("Finch") block — attention-free token mixing with data-dependent
+decay, built on the chunked rolling scan (linear_scan.py).
+
+Faithful structure (arXiv:2404.05892):
+  * token-shift ddlerp: per-channel lerp between x_t and x_{t-1} whose mix
+    coefficient is itself data-dependent through a rank-``lora_rank`` LoRA;
+  * per-channel decay w_t = exp(-exp(dd_w(x))) — the data-dependent decay
+    that makes the scan *segmented-like* (a strongly-decayed channel is a
+    soft segment boundary, which is why the engine's rolling scan machinery
+    fits it);
+  * u-bonus for the current token; per-head GroupNorm on the scan output;
+    SiLU-gated output projection;
+  * channel mixing: token-shifted squared-ReLU MLP gated by sigmoid(r).
+
+Head size fixed at 64 (the RWKV convention); heads = d_model / 64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+from repro.models.linear_scan import chunked_decay_scan, decay_scan_step
+
+Array = jax.Array
+HEAD_DIM = 64
+MIX_NAMES = ("r", "k", "v", "g", "w")
+
+
+def init_rwkv_time_mix(key, d: int, d_ff_unused: int, dtype, *,
+                       lora_rank: int = 32, decay_rank: int = 64):
+    ks = P.split_keys(key, 16)
+    h = d // HEAD_DIM
+    p = {
+        # ddlerp: shared first-stage mix + per-signal LoRA
+        "mix_base": jnp.zeros((5, d), dtype),
+        "mix_lora_a": P.dense_init(ks[0], d, 5 * lora_rank, dtype),
+        "mix_lora_b": (jnp.zeros((5, lora_rank, d), dtype)),
+        "mix_x": jnp.zeros((d,), dtype),
+        # projections
+        "wr": P.dense_init(ks[1], d, d, dtype),
+        "wk": P.dense_init(ks[2], d, d, dtype),
+        "wv": P.dense_init(ks[3], d, d, dtype),
+        "wg": P.dense_init(ks[4], d, d, dtype),
+        "wo": P.dense_init(ks[5], d, d, dtype),
+        # decay: base + LoRA (data-dependent part)
+        "w_base": jnp.full((d,), -6.0, dtype),  # slow decay at init
+        "w_lora_a": P.dense_init(ks[6], d, decay_rank, dtype),
+        "w_lora_b": jnp.zeros((decay_rank, d), dtype),
+        # current-token bonus
+        "u": jnp.zeros((h, HEAD_DIM), dtype),
+        # per-head groupnorm
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x_{t-1} per position; ``prev`` is the carry token for streaming."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x: Array, xx: Array, lora_rank: int):
+    """Data-dependent lerp for the five signals -> dict name->mixed input."""
+    dx = xx - x
+    base_in = x + dx * p["mix_x"]
+    lora = jnp.tanh(base_in @ p["mix_lora_a"])          # [B,T,5R]
+    b, t, _ = lora.shape
+    lora = lora.reshape(b, t, 5, lora_rank)
+    # per-signal second stage: [B,T,5,R] @ [5,R,D] -> [B,T,5,D]
+    delta = jnp.einsum("btsr,srd->btsd", lora, p["mix_lora_b"])
+    mixes = p["mix_base"][None, None] + delta           # [B,T,5,D]
+    return {name: x + dx * mixes[:, :, i]
+            for i, name in enumerate(MIX_NAMES)}
+
+
+def _signals(p, x: Array, prev: Array | None, lora_rank: int):
+    b, t, d = x.shape
+    h = d // HEAD_DIM
+    xx = _token_shift(x, prev)
+    m = _ddlerp(p, x, xx, lora_rank)
+    r = (m["r"] @ p["wr"]).reshape(b, t, h, HEAD_DIM)
+    k = (m["k"] @ p["wk"]).reshape(b, t, h, HEAD_DIM)
+    v = (m["v"] @ p["wv"]).reshape(b, t, h, HEAD_DIM)
+    g = m["g"] @ p["wg"]
+    log_w = -jnp.exp(
+        (p["w_base"] + jnp.tanh(m["w"] @ p["w_lora_a"]) @ p["w_lora_b"])
+        .astype(jnp.float32))
+    log_w = log_w.reshape(b, t, h, HEAD_DIM)
+    return r, k, v, g, log_w
+
+
+def _head_groupnorm(p, y: Array, out_dtype) -> Array:
+    """GroupNorm with one group per head over [B,T,H,Dh] (fp32 stats,
+    out_dtype application — §Perf Z2)."""
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    yn = ((y - mu.astype(y.dtype))
+          * jax.lax.rsqrt(var + 64e-5).astype(y.dtype)).astype(out_dtype)
+    b, t, h, dh = y.shape
+    yn = yn.reshape(b, t, h * dh)
+    return yn * p["gn_scale"] + p["gn_bias"]
+
+
+def rwkv_time_mix(p, x: Array, *, lora_rank: int = 32,
+                  state: dict | None = None, chunk: int = 32):
+    """Full-sequence (train/prefill) time mixing.  Returns (out, new_state)."""
+    b, t, d = x.shape
+    h = d // HEAD_DIM
+    prev = None if state is None else state["shift_t"]
+    s0 = None if state is None else state["S"]
+    r, k, v, g, log_w = _signals(p, x, prev, lora_rank)
+    y, s_new = chunked_decay_scan(r, k, v, log_w, bonus=p["u"],
+                                  inclusive=False, chunk=chunk,
+                                  initial_state=s0, return_state=True)
+    y = _head_groupnorm(p, y, x.dtype)
+    out = (y * jax.nn.silu(g)) @ p["wo"]
+    new_state = {"shift_t": x[:, -1], "S": s_new}
+    return out, new_state
+
+
+def rwkv_time_mix_step(p, x: Array, state: dict, *, lora_rank: int = 32):
+    """Single-token decode.  x [B, D]."""
+    xs = x[:, None, :]
+    prev = state["shift_t"]
+    r, k, v, g, log_w = _signals(p, xs, prev, lora_rank)
+    y, s_new = decay_scan_step(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+                               state["S"], bonus=p["u"], inclusive=False)
+    y = _head_groupnorm(p, y[:, None], x.dtype)
+    out = (y * jax.nn.silu(g))[:, 0] @ p["wo"]
+    return out, {"shift_t": x, "S": s_new}
+
+
+# --------------------------------------------------------------------------
+# channel mixing
+# --------------------------------------------------------------------------
+
+def init_rwkv_channel_mix(key, d: int, d_ff: int, dtype):
+    ks = P.split_keys(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "wk": P.dense_init(ks[0], d, d_ff, dtype),
+        "wv": P.dense_init(ks[1], d_ff, d, dtype),
+        "wr": P.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def rwkv_channel_mix(p, x: Array, *, state: dict | None = None):
+    prev = None if state is None else state["shift_c"]
+    xx = _token_shift(x, prev)
+    xk = x + (xx - x) * p["mix_k"]
+    xr = x + (xx - x) * p["mix_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    return out, {"shift_c": x[:, -1]}
+
+
+def rwkv_channel_mix_step(p, x: Array, state: dict):
+    out, _ = rwkv_channel_mix(p, x[:, None, :],
+                              state={"shift_c": state["shift_c"]})
+    return out[:, 0], {"shift_c": x}
+
+
+def init_rwkv_state(batch: int, d: int, dtype):
+    h = d // HEAD_DIM
+    return {
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+        "S": jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimizerConfig, adamw_init, adamw_update, global_norm, lr_at_step)

@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights, global-norm clipping and LR schedules.
+
+The optimizer state (master + both moments) is the dominant memory term at
+scale; its sharding is decided by the launch layer (ZeRO over the full
+``(pod, data)`` product — see distributed/sharding.py) and the ``moment_dtype``
+knob trades HBM for fidelity on the biggest archs (arctic-480b defaults to
+bf16 moments in the dry-run config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"       # cosine | linear | constant
+    moment_dtype: str = "float32"  # float32 | bfloat16
+    master_dtype: str = "float32"  # float32 | none (update bf16 params
+    #                                directly — the 480B/256-chip regime)
+
+
+def lr_at_step(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_init(params, cfg: OptimizerConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), params),
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), params),
+    }
+    if cfg.master_dtype != "none":
+        state["master"] = jax.tree.map(
+            lambda x: x.astype(cfg.master_dtype), params)
+    return state
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics).  params keep their dtype
+    (bf16 working copy); master/moments update in their own dtypes."""
+    step = state["step"] + 1
+    lr = lr_at_step(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd_core(g, m, v, master):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_master = (master.astype(jnp.float32)
+                      * (1.0 - lr * cfg.weight_decay) - lr * delta)
+        return (m32.astype(m.dtype), v32.astype(v.dtype),
+                new_master.astype(master.dtype))
+
+    upd = upd_core  # elementwise chain fuses in-place on TPU
+
+    has_master = "master" in state
+    masters = state["master"] if has_master else params
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(masters)
+    treedef = jax.tree.structure(grads)
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if has_master:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

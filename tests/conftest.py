@@ -1,0 +1,44 @@
+"""Shared fixtures + Python oracles.  NOTE: no XLA_FLAGS here — smoke tests
+and benches must see 1 device; only dryrun.py forces 512."""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+import pytest
+
+
+def py_group_aggregate(groups, keys, fn):
+    """Reference group-by-aggregate: dict-of-lists + sorted emit order."""
+    d = collections.defaultdict(list)
+    for g, k in zip(np.asarray(groups).tolist(), np.asarray(keys).tolist()):
+        d[g].append(k)
+    items = sorted(d.items())
+    return [g for g, _ in items], [fn(v) for _, v in items]
+
+
+PY_OPS = {
+    "sum": sum,
+    "min": min,
+    "max": max,
+    "count": len,
+    "mean": lambda v: sum(v) / len(v),
+    "distinct_count": lambda v: len(set(v)),
+    "first": lambda v: v[0],
+    "last": lambda v: v[-1],
+    "median": lambda v: sorted(v)[(len(v) - 1) // 2],
+}
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def sorted_stream(rng, n, n_groups, key_max=1000, full_sort=False):
+    g = np.sort(rng.integers(0, n_groups, n)).astype(np.int32)
+    k = rng.integers(0, key_max, n).astype(np.int32)
+    if full_sort:
+        order = np.lexsort((k, g))
+        g, k = g[order], k[order]
+    return g, k

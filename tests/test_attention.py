@@ -1,0 +1,132 @@
+"""Attention correctness: GQA grouping, causal/SWA masks, block-chunked
+prefill == unblocked, ring-buffer decode, RoPE properties."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, mode, window):
+    b, tq, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    out = np.zeros_like(np.asarray(v, np.float32),
+                        shape=(b, tq, h, dh))
+    for hh in range(h):
+        kk = np.asarray(k, np.float32)[:, :, hh // g]
+        vv = np.asarray(v, np.float32)[:, :, hh // g]
+        qq = np.asarray(q, np.float32)[:, :, hh]
+        scores = np.einsum("btd,bsd->bts", qq, kk) / np.sqrt(dh)
+        for t in range(tq):
+            for ss in range(s):
+                d = t - ss
+                if mode != "full" and d < 0:
+                    scores[:, t, ss] = -1e30
+                if mode == "swa" and d >= window:
+                    scores[:, t, ss] = -1e30
+        p = np.exp(scores - scores.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        out[:, :, hh] = np.einsum("bts,bsd->btd", p, vv)
+    return out
+
+
+@pytest.mark.parametrize("mode,window", [("causal", 0), ("full", 0),
+                                         ("swa", 4)])
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_attend_vs_naive(mode, window, h, hkv, rng):
+    b, t, dh = 2, 16, 8
+    q = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, hkv, dh)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, hkv, dh)).astype(np.float32))
+    got = A.attend(q, k, v, mode=mode, window=window)
+    want = naive_attention(q, k, v, mode, window)
+    np.testing.assert_allclose(np.array(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_equals_unblocked(rng):
+    b, t, h, dh = 1, 64, 2, 8
+    q = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    a = A.attend(q, k, v, mode="causal", q_block=16)
+    b_ = A.attend(q, k, v, mode="causal", q_block=64)
+    np.testing.assert_allclose(np.array(a), np.array(b_), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_swa_sliced_kv_path(rng):
+    """The O(T*W) sliced-KV sliding-window path == full-mask SWA."""
+    b, t, h, dh, w = 1, 128, 2, 8, 16
+    q = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    sliced = A.attend(q, k, v, mode="swa", window=w, q_block=32)  # slices
+    full = A.attend(q, k, v, mode="swa", window=w, q_block=128)   # one block
+    np.testing.assert_allclose(np.array(sliced), np.array(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_cache_equals_prefill(rng):
+    b, t, h, dh = 1, 12, 2, 8
+    q = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    full = A.attend(q, k, v, mode="causal")
+    cache = A.init_cache(b, t, h, dh, jnp.float32)
+    outs = []
+    for i in range(t):
+        cache = A.cache_append(cache, k[:, i:i + 1], v[:, i:i + 1])
+        outs.append(A.decode_attend(q[:, i:i + 1], cache))
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.array(got), np.array(full), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ring_buffer_swa_decode(rng):
+    """Ring cache of size W == dense cache with SWA mask."""
+    b, h, dh, w, t = 1, 2, 8, 4, 10
+    q = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(b, t, h, dh)).astype(np.float32))
+    full = A.attend(q, k, v, mode="swa", window=w)
+    ring = A.init_cache(b, w, h, dh, jnp.float32)
+    outs = []
+    for i in range(t):
+        ring = A.cache_append(ring, k[:, i:i + 1], v[:, i:i + 1], ring=True)
+        outs.append(A.decode_attend(q[:, i:i + 1], ring))
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.array(got), np.array(full), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rope_relative_property(rng):
+    """RoPE: q.k depends only on relative offset."""
+    dh = 16
+    q = rng.normal(size=(1, 1, 1, dh)).astype(np.float32)
+    k = rng.normal(size=(1, 1, 1, dh)).astype(np.float32)
+
+    def dot_at(pq, pk):
+        sq, cq = L.rope_angles(jnp.array([pq]), dh, 1e4)
+        sk, ck = L.rope_angles(jnp.array([pk]), dh, 1e4)
+        qr = L.apply_rope(jnp.array(q), sq, cq, dh)
+        kr = L.apply_rope(jnp.array(k), sk, ck, dh)
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+def test_partial_rope_passthrough(rng):
+    """chatglm3 2d-RoPE: the unrotated tail is position-independent."""
+    dh = 16
+    x = jnp.array(rng.normal(size=(1, 1, 1, dh)).astype(np.float32))
+    s, c = L.rope_angles(jnp.array([11]), dh // 2, 1e4)
+    out = L.apply_rope(x, s, c, dh // 2)
+    np.testing.assert_array_equal(np.array(out[..., dh // 2:]),
+                                  np.array(x[..., dh // 2:]))

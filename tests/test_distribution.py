@@ -1,0 +1,151 @@
+"""Distribution layer: sharding rules, small-mesh SPMD train/serve parity,
+pod-sync compression, complexity model, end-to-end trainer resume."""
+from __future__ import annotations
+
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import complexity
+from repro.distributed import sharding as SH
+from repro.distributed import steps as ST
+from repro.optim import OptimizerConfig, adamw
+from repro.models import model as MDL
+
+
+def single_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def test_param_specs_cover_tree():
+    cfg = get_config("mixtral-8x7b")
+    scheme = SH.make_scheme(single_mesh())
+    params = ST.abstract_params(cfg)
+    specs = SH.param_specs(params, cfg, scheme)
+    n_leaves = len(jax.tree.leaves(params))
+    n_specs = len(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_leaves == n_specs
+
+
+def test_param_specs_divisibility_guard():
+    """qwen's 20 heads can't tile a 16-wide model axis -> attention TP must
+    fall back to replication while MLP TP stays on."""
+    cfg = get_config("qwen1.5-4b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    # fake a 16-wide model axis via spec logic only
+    scheme = SH.Scheme(mesh=mesh, dp=("data",), fsdp=("data",),
+                       opt_fsdp=("data",), tp="model")
+    params = ST.abstract_params(cfg)
+    specs = SH.param_specs(params, cfg, scheme)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, spec in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", "")))
+                       for p in path)
+        if key.endswith("attn/wq"):
+            # 20 heads x 128 hd = 2560 % 1 == 0 for this 1-wide mesh; rule
+            # logic is exercised with the production mesh in the dry-run
+            assert isinstance(spec, P)
+
+
+def test_spmd_train_step_runs_small_mesh():
+    """Real (non-abstract) sharded train step on a 1x1 mesh."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    mesh = single_mesh()
+    scheme = SH.make_scheme(mesh, shard_batch=False)
+    opt_cfg = OptimizerConfig(warmup_steps=1, total_steps=4)
+    params = MDL.init_model(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw.adamw_init(params, opt_cfg)
+    step, _ = ST.make_train_step(cfg, opt_cfg, scheme, remat="dots",
+                                 microbatches=2)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens,
+             "loss_mask": jnp.ones((4, 16), jnp.float32)}
+    with mesh:
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        p1, o1, m1 = jstep(params, opt_state, batch)
+        p2, o2, m2 = jstep(p1, o1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 0.5
+    assert int(o2["step"]) == 2
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Gradient accumulation == single-batch gradients (fp32 acc)."""
+    cfg = get_config("internlm2-1.8b").reduced(dtype="float32")
+    mesh = single_mesh()
+    scheme = SH.make_scheme(mesh, shard_batch=False)
+    opt_cfg = OptimizerConfig(warmup_steps=1, total_steps=4)
+    params = MDL.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens,
+             "loss_mask": jnp.ones((4, 16), jnp.float32)}
+
+    def run(mb):
+        step, _ = ST.make_train_step(cfg, opt_cfg, scheme, remat="none",
+                                     microbatches=mb)
+        opt_state = adamw.adamw_init(params, opt_cfg)
+        with mesh:
+            p, _, m = jax.jit(step)(params, opt_state, batch)
+        return p, m
+
+    p1, m1 = run(1)
+    p2, m2 = run(2)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_complexity_model_paper_numbers():
+    """Section III closed form: 2P log2 P + P + 1, and the >= 1.9x FF claim
+    direction (ratio grows with P and exceeds 1.8 at P=4)."""
+    assert complexity.engine_entities(4) == 2 * 4 * 2 + 4 + 1  # 21
+    assert complexity.modular_entities(4) == 3 * 4 + 2 * complexity.prra_entities(4)
+    assert complexity.reduction_ratio(4) > 1.8
+    assert complexity.reduction_ratio(64) > complexity.reduction_ratio(4)
+
+
+def test_decode_state_specs_cover():
+    cfg = get_config("zamba2-1.2b").reduced()
+    scheme = SH.make_scheme(single_mesh(), shard_batch=False)
+    state = ST.decode_state_specs_abstract(cfg, 2, 32)
+    specs = SH.decode_state_specs(state, cfg, scheme)
+    assert len(jax.tree.leaves(state)) == len(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+@pytest.mark.slow
+def test_trainer_checkpoint_restart(tmp_path):
+    """End-to-end fault tolerance: train 6 steps, kill, resume to 10 —
+    losses continue from the checkpointed trajectory."""
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "internlm2-1.8b", "--reduced", "--batch", "4",
+           "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "3",
+           "--log-every", "1"]
+    r1 = subprocess.run(cmd + ["--steps", "6"], capture_output=True,
+                        text=True, env=_env(), timeout=600)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = subprocess.run(cmd + ["--steps", "10"], capture_output=True,
+                        text=True, env=_env(), timeout=600)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 6" in r2.stdout
+
+
+def _env():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return env

@@ -1,0 +1,136 @@
+"""Core engine behaviour vs Python oracles + hypothesis property tests."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAPER_DC_OPS, engine_step, group_by_aggregate,
+                        init_carry, get_combiner, rr_ports, sort_pairs_xla)
+from conftest import PY_OPS, py_group_aggregate, sorted_stream
+
+ALL_TEST_OPS = ("sum", "min", "max", "count", "mean", "distinct_count",
+                "first", "last")
+
+
+@pytest.mark.parametrize("op", ALL_TEST_OPS)
+@pytest.mark.parametrize("n_groups", [1, 7, 64])
+def test_group_by_aggregate_matches_oracle(op, n_groups, rng):
+    g, k = sorted_stream(rng, 256, n_groups,
+                         full_sort=op == "distinct_count")
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), op)
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+    np.testing.assert_allclose(np.array(res.values[:n], np.float64), ov,
+                               rtol=1e-6)
+    assert not np.array(res.valid[n:]).any()
+
+
+def test_paper_operator_set_complete():
+    """The dc engine variant supports exactly min/max/sum/count/distinct."""
+    for op in PAPER_DC_OPS:
+        get_combiner(op)  # must resolve
+
+
+def test_single_group_single_output(rng):
+    """Paper: 'if all tuples have the same group ID ... a single tuple in
+    the output'."""
+    k = rng.integers(0, 100, 128).astype(np.int32)
+    res = group_by_aggregate(jnp.zeros(128, jnp.int32), jnp.array(k), "sum")
+    assert int(res.num_groups) == 1
+    assert int(res.values[0]) == int(k.sum())
+
+
+def test_all_distinct_groups(rng):
+    g = np.arange(64, dtype=np.int32)
+    k = rng.integers(0, 100, 64).astype(np.int32)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), "max")
+    assert int(res.num_groups) == 64
+    np.testing.assert_array_equal(np.array(res.values), k)
+
+
+def test_n_valid_padding(rng):
+    g, k = sorted_stream(rng, 128, 9)
+    res_full = group_by_aggregate(jnp.array(g[:100]), jnp.array(k[:100]),
+                                  "sum")
+    res_pad = group_by_aggregate(jnp.array(g), jnp.array(k), "sum",
+                                 n_valid=jnp.asarray(100))
+    n = int(res_full.num_groups)
+    assert n == int(res_pad.num_groups)
+    np.testing.assert_array_equal(np.array(res_full.groups[:n]),
+                                  np.array(res_pad.groups[:n]))
+    np.testing.assert_array_equal(np.array(res_full.values[:n]),
+                                  np.array(res_pad.values[:n]))
+
+
+def test_rr_ports_round_robin(rng):
+    """PRRA property: consecutive outputs rotate across the P ports."""
+    g, k = sorted_stream(rng, 64, 16)
+    res, carry = engine_step(jnp.array(g), jnp.array(k), "sum",
+                             carry=init_carry(get_combiner("sum"), jnp.int32))
+    ports = rr_ports(res, jnp.zeros((), jnp.int32), 4)
+    n = int(res.num_groups)
+    np.testing.assert_array_equal(np.array(ports[:n]), np.arange(n) % 4)
+
+
+def test_float_keys(rng):
+    g = np.sort(rng.integers(0, 5, 64)).astype(np.int32)
+    k = rng.normal(size=64).astype(np.float32)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), "mean")
+    og, ov = py_group_aggregate(g, k, PY_OPS["mean"])
+    n = int(res.num_groups)
+    np.testing.assert_allclose(np.array(res.values[:n]), ov, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property-based: engine == oracle for arbitrary sorted streams
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(st.tuples(st.integers(0, 9), st.integers(-50, 50)),
+                  min_size=1, max_size=200),
+    op=st.sampled_from(("sum", "min", "max", "count", "mean")),
+)
+def test_property_engine_matches_oracle(data, op):
+    data.sort()
+    g = np.array([d[0] for d in data], np.int32)
+    k = np.array([d[1] for d in data], np.int32)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), op)
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_allclose(np.array(res.values[:n], np.float64), ov,
+                               rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 8)),
+                     min_size=1, max_size=150))
+def test_property_distinct_count(data):
+    g = np.array(sorted(d[0] for d in data), np.int32)
+    k = np.array([d[1] for d in data], np.int32)
+    gs, ks = sort_pairs_xla(jnp.array(g), jnp.array(k))
+    res = group_by_aggregate(gs, ks, "distinct_count")
+    og, ov = py_group_aggregate(np.array(gs), np.array(ks),
+                                PY_OPS["distinct_count"])
+    n = int(res.num_groups)
+    np.testing.assert_array_equal(np.array(res.values[:n]), ov)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    op=st.sampled_from(("sum", "min", "max", "count")),
+)
+def test_property_multi_op_consistency(seed, op):
+    """All ops agree on the same group partitioning (groups/valid/num)."""
+    rng = np.random.default_rng(seed)
+    g, k = sorted_stream(rng, 64, 8)
+    a = group_by_aggregate(jnp.array(g), jnp.array(k), op)
+    b = group_by_aggregate(jnp.array(g), jnp.array(k), "count")
+    assert int(a.num_groups) == int(b.num_groups)
+    np.testing.assert_array_equal(np.array(a.groups), np.array(b.groups))

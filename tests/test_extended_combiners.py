@@ -1,0 +1,49 @@
+"""Extended function_select operators (beyond the paper's base set):
+variance (parallel Welford monoid), argmin/argmax."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import group_by_aggregate
+from conftest import py_group_aggregate, sorted_stream
+
+
+def test_variance_matches_numpy(rng):
+    g, k = sorted_stream(rng, 256, 9)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k.astype(np.float32)),
+                             "variance")
+    og, ov = py_group_aggregate(g, k, lambda v: float(np.var(v)))
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_allclose(np.array(res.values[:n]), ov, rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("op,npfn", [("argmin", np.argmin),
+                                     ("argmax", np.argmax)])
+def test_argminmax_global_positions(op, npfn, rng):
+    g, k = sorted_stream(rng, 128, 7)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), op)
+    n = int(res.num_groups)
+    for gi, pos in zip(np.array(res.groups[:n]), np.array(res.values[:n])):
+        idxs = np.nonzero(g == gi)[0]
+        want = idxs[npfn(k[idxs])]
+        assert int(pos) == int(want), (op, gi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.lists(st.tuples(st.integers(0, 4),
+                               st.floats(-100, 100, allow_nan=False)),
+                     min_size=2, max_size=100))
+def test_property_variance_welford(data):
+    data.sort(key=lambda t: t[0])
+    g = np.array([d[0] for d in data], np.int32)
+    k = np.array([d[1] for d in data], np.float32)
+    res = group_by_aggregate(jnp.array(g), jnp.array(k), "variance")
+    og, ov = py_group_aggregate(g, k, lambda v: float(np.var(v)))
+    n = int(res.num_groups)
+    np.testing.assert_allclose(np.array(res.values[:n]), ov, rtol=1e-3,
+                               atol=1e-3)

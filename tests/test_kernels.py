@@ -1,0 +1,184 @@
+"""Pallas kernels vs pure-jnp oracles: shape x dtype sweeps, interpret mode.
+
+Each kernel (segscan / bitonic / groupagg / swag) is checked against its
+ref.py oracle across sizes that exercise: single tile, tile boundaries,
+partial tiles, many tiles, and both int32 / float32 keys.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.combiners import get_combiner
+from repro.kernels.segscan.ops import segmented_scan_tpu
+from repro.kernels.segscan.ref import segmented_scan_ref
+from repro.kernels.bitonic.ops import bitonic_sort_tpu, sort_pairs_tpu
+from repro.kernels.bitonic.ref import sort_ref
+from repro.kernels.groupagg.ops import group_by_aggregate_tpu
+from repro.kernels.groupagg.ref import group_by_aggregate_ref
+from repro.kernels.swag.ops import swag_tpu
+from repro.kernels.swag.ref import swag_ref
+
+OPS = ("sum", "min", "max", "count", "mean", "distinct_count")
+
+
+def stream(rng, n, n_groups, dtype, full_sort):
+    g = np.sort(rng.integers(0, n_groups, n)).astype(np.int32)
+    if dtype == np.float32:
+        k = rng.normal(size=n).astype(np.float32) * 10
+    else:
+        k = rng.integers(0, 100, n).astype(dtype)
+    if full_sort:
+        order = np.lexsort((k, g))
+        g, k = g[order], k[order]
+    return g, k
+
+
+# ---------------------------------------------------------------------------
+# segscan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("n,tile", [(64, 64), (256, 64), (1000, 128),
+                                    (513, 256)])
+def test_segscan_kernel_vs_ref(op, n, tile, rng):
+    g, k = stream(rng, n, 11, np.int32, op == "distinct_count")
+    flags = np.concatenate([[True], g[1:] != g[:-1]])
+    comb = get_combiner(op)
+    state = comb.lift(jnp.array(k))
+    got = segmented_scan_tpu(jnp.array(flags), state, op, tile=tile)
+    want = segmented_scan_ref(jnp.array(flags), state, op)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_segscan_dtypes(dtype, rng):
+    g, k = stream(rng, 300, 5, dtype, False)
+    flags = np.concatenate([[True], g[1:] != g[:-1]])
+    comb = get_combiner("sum")
+    state = comb.lift(jnp.array(k))
+    got = segmented_scan_tpu(jnp.array(flags), state, "sum", tile=128)
+    want = segmented_scan_ref(jnp.array(flags), state, "sum")
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5)
+
+
+def test_segscan_single_segment_many_tiles(rng):
+    """One segment spanning 8 tiles: the rolling carry path."""
+    k = rng.integers(0, 10, 1024).astype(np.int32)
+    flags = np.zeros(1024, bool)
+    flags[0] = True
+    got = segmented_scan_tpu(jnp.array(flags), jnp.array(k), "sum", tile=128)
+    np.testing.assert_array_equal(np.array(got), np.cumsum(k))
+
+
+# ---------------------------------------------------------------------------
+# bitonic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 64, 500, 1024])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_bitonic_kernel_vs_ref(n, dtype, rng):
+    g = rng.integers(0, 23, n).astype(np.int32)
+    k = (rng.normal(size=n) * 50).astype(dtype)
+    bg, bk = sort_pairs_tpu(jnp.array(g), jnp.array(k))
+    xg, xk = sort_ref((jnp.array(g), jnp.array(k)), num_keys=2)
+    np.testing.assert_array_equal(np.array(bg), np.array(xg))
+    np.testing.assert_array_equal(np.array(bk), np.array(xk))
+
+
+def test_bitonic_batched_rows(rng):
+    g = rng.integers(0, 9, (5, 64)).astype(np.int32)
+    k = rng.integers(0, 99, (5, 64)).astype(np.int32)
+    bg, bk = bitonic_sort_tpu((jnp.array(g), jnp.array(k)), num_keys=2)
+    for r in range(5):
+        xg, xk = sort_ref((jnp.array(g[r]), jnp.array(k[r])), num_keys=2)
+        np.testing.assert_array_equal(np.array(bg[r]), np.array(xg))
+        np.testing.assert_array_equal(np.array(bk[r]), np.array(xk))
+
+
+# ---------------------------------------------------------------------------
+# groupagg (fused engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("n,tile,groups", [
+    (256, 256, 7), (1000, 128, 31), (64, 64, 1), (2048, 512, 600)])
+def test_groupagg_kernel_vs_ref(op, n, tile, groups, rng):
+    g, k = stream(rng, n, groups, np.int32, op == "distinct_count")
+    got = group_by_aggregate_tpu(jnp.array(g), jnp.array(k), op, tile=tile)
+    want = group_by_aggregate_ref(jnp.array(g), jnp.array(k), op)
+    n1, n2 = int(got.num_groups), int(want.num_groups)
+    assert n1 == n2
+    np.testing.assert_array_equal(np.array(got.groups[:n1]),
+                                  np.array(want.groups[:n1]))
+    np.testing.assert_allclose(np.array(got.values[:n1], np.float64),
+                               np.array(want.values[:n1], np.float64),
+                               rtol=1e-6)
+
+
+def test_groupagg_group_spanning_tiles(rng):
+    """Groups crossing tile boundaries: the pending/rolling protocol."""
+    g = np.repeat(np.arange(4, dtype=np.int32), 100)  # 100 > tile 64
+    k = rng.integers(0, 10, 400).astype(np.int32)
+    got = group_by_aggregate_tpu(jnp.array(g), jnp.array(k), "sum", tile=64)
+    want = group_by_aggregate_ref(jnp.array(g), jnp.array(k), "sum")
+    n = int(want.num_groups)
+    assert int(got.num_groups) == n == 4
+    np.testing.assert_array_equal(np.array(got.values[:n]),
+                                  np.array(want.values[:n]))
+
+
+def test_groupagg_float_keys(rng):
+    g = np.sort(rng.integers(0, 6, 256)).astype(np.int32)
+    k = rng.normal(size=256).astype(np.float32)
+    got = group_by_aggregate_tpu(jnp.array(g), jnp.array(k), "mean", tile=64)
+    want = group_by_aggregate_ref(jnp.array(g), jnp.array(k), "mean")
+    n = int(want.num_groups)
+    np.testing.assert_allclose(np.array(got.values[:n]),
+                               np.array(want.values[:n]), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    op=st.sampled_from(("sum", "min", "count")),
+    tile=st.sampled_from((64, 128)),
+)
+def test_property_groupagg_kernel(seed, op, tile):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 700))
+    g, k = stream(rng, n, int(rng.integers(1, 50)), np.int32, False)
+    got = group_by_aggregate_tpu(jnp.array(g), jnp.array(k), op, tile=tile)
+    want = group_by_aggregate_ref(jnp.array(g), jnp.array(k), op)
+    nw = int(want.num_groups)
+    assert int(got.num_groups) == nw
+    np.testing.assert_allclose(np.array(got.values[:nw], np.float64),
+                               np.array(want.values[:nw], np.float64),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# swag (fused window sort + engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "min", "max", "count", "mean",
+                                "median", "distinct_count"])
+@pytest.mark.parametrize("ws,wa", [(64, 64), (64, 32), (128, 32)])
+def test_swag_kernel_vs_ref(op, ws, wa, rng):
+    g = rng.integers(0, 8, 512).astype(np.int32)
+    k = rng.integers(0, 50, 512).astype(np.int32)
+    got = swag_tpu(jnp.array(g), jnp.array(k), ws=ws, wa=wa, op=op)
+    wg, wv, _wva, wn = swag_ref(jnp.array(g), jnp.array(k), ws=ws, wa=wa,
+                                op=op)
+    np.testing.assert_array_equal(np.array(got.num_groups), np.array(wn))
+    for w in range(got.groups.shape[0]):
+        nn = int(got.num_groups[w])
+        np.testing.assert_array_equal(np.array(got.groups[w, :nn]),
+                                      np.array(wg[w, :nn]))
+        np.testing.assert_allclose(
+            np.array(got.values[w, :nn], np.float64),
+            np.array(wv[w, :nn], np.float64), rtol=1e-6)

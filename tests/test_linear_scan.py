@@ -1,0 +1,139 @@
+"""Chunked decay scan (the model-layer rolling scan) vs naive recurrence +
+hypothesis properties; RWKV/Mamba block stepping consistency."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_scan import chunked_decay_scan, decay_scan_step
+from repro.models import mamba as M
+from repro.models import rwkv as R
+
+
+def naive(q, k, v, lw, u=None, inclusive=False):
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    y = np.zeros((b, t, h, dv), np.float32)
+    s = np.zeros((b, h, dk, dv), np.float32)
+    for i in range(t):
+        w = np.exp(lw[:, i])
+        outer = np.einsum("bhd,bhv->bhdv", k[:, i], v[:, i])
+        if inclusive:
+            s = w[..., None] * s + outer
+            y[:, i] = np.einsum("bhd,bhdv->bhv", q[:, i], s)
+        else:
+            y[:, i] = np.einsum("bhd,bhdv->bhv", q[:, i], s)
+            if u is not None:
+                y[:, i] += np.sum(q[:, i] * u * k[:, i], -1,
+                                  keepdims=True) * v[:, i]
+            s = w[..., None] * s + outer
+    return y, s
+
+
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("chunk", [8, 32])
+@pytest.mark.parametrize("t", [5, 32, 100])
+def test_chunked_scan_vs_naive(inclusive, chunk, t, rng):
+    b, h, dk, dv = 2, 3, 8, 5
+    q = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dv)).astype(np.float32)
+    lw = -np.abs(rng.normal(size=(b, t, h, dk))).astype(np.float32)
+    want, sw = naive(q, k, v, lw, inclusive=inclusive)
+    got, sg = chunked_decay_scan(*map(jnp.array, (q, k, v, lw)),
+                                 inclusive=inclusive, chunk=chunk,
+                                 return_state=True)
+    np.testing.assert_allclose(np.array(got), want, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.array(sg), sw, rtol=3e-4, atol=3e-4)
+
+
+def test_scan_extreme_decay_stable(rng):
+    """Strong decay must underflow to zero, never overflow (the log-space
+    guarantee: every exponent <= 0)."""
+    b, t, h, dk, dv = 1, 64, 2, 4, 4
+    q = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dv)).astype(np.float32)
+    lw = np.full((b, t, h, dk), -80.0, np.float32)  # near-total decay
+    y = chunked_decay_scan(*map(jnp.array, (q, k, v, lw)), inclusive=True,
+                           chunk=16)
+    assert np.isfinite(np.array(y)).all()
+
+
+def test_scan_state_continuation(rng):
+    """Splitting a sequence and carrying the state == one long scan."""
+    b, t, h, dk, dv = 1, 40, 2, 4, 4
+    q = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dv)).astype(np.float32)
+    lw = -np.abs(rng.normal(size=(b, t, h, dk))).astype(np.float32)
+    full = chunked_decay_scan(*map(jnp.array, (q, k, v, lw)), inclusive=True,
+                              chunk=8)
+    y1, s1 = chunked_decay_scan(
+        *[jnp.array(x[:, :24]) for x in (q, k, v, lw)], inclusive=True,
+        chunk=8, return_state=True)
+    y2 = chunked_decay_scan(
+        *[jnp.array(x[:, 24:]) for x in (q, k, v, lw)], inclusive=True,
+        chunk=8, initial_state=s1)
+    np.testing.assert_allclose(
+        np.concatenate([np.array(y1), np.array(y2)], axis=1),
+        np.array(full), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 50),
+       chunk=st.sampled_from([4, 16]))
+def test_property_scan_prefix_consistency(seed, t, chunk):
+    """y[:k] of a length-t scan equals the scan of the length-k prefix."""
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 1, 1, 3, 3
+    q = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, t, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, t, h, dv)).astype(np.float32)
+    lw = -np.abs(rng.normal(size=(b, t, h, dk))).astype(np.float32)
+    full = chunked_decay_scan(*map(jnp.array, (q, k, v, lw)), inclusive=True,
+                              chunk=chunk)
+    kcut = max(1, t // 2)
+    pre = chunked_decay_scan(
+        *[jnp.array(x[:, :kcut]) for x in (q, k, v, lw)], inclusive=True,
+        chunk=chunk)
+    np.testing.assert_allclose(np.array(full)[:, :kcut], np.array(pre),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv / mamba block consistency: full-sequence vs token-by-token stepping
+# ---------------------------------------------------------------------------
+
+def test_rwkv_time_mix_step_equals_sequence(rng):
+    d = 128
+    p = R.init_rwkv_time_mix(jax.random.PRNGKey(0), d, 0, jnp.float32)
+    x = jnp.array(rng.normal(size=(2, 6, d)).astype(np.float32) * 0.1)
+    y_seq, _ = R.rwkv_time_mix(p, x, chunk=4)
+    state = R.init_rwkv_state(2, d, jnp.float32)
+    outs = []
+    st_ = {"shift_t": state["shift_t"], "S": state["S"]}
+    for t in range(6):
+        y, st_ = R.rwkv_time_mix_step(p, x[:, t], st_)
+        outs.append(y)
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(y_step), np.array(y_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_mix_step_equals_sequence(rng):
+    d, s = 128, 16
+    p = M.init_mamba(jax.random.PRNGKey(0), d, s, jnp.float32)
+    x = jnp.array(rng.normal(size=(2, 6, d)).astype(np.float32) * 0.1)
+    y_seq, _ = M.mamba_mix(p, x, ssm_state=s, chunk=4)
+    state = M.init_mamba_state(2, d, s, jnp.float32)
+    outs = []
+    for t in range(6):
+        y, state = M.mamba_mix_step(p, x[:, t], state, ssm_state=s)
+        outs.append(y)
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(y_step), np.array(y_seq),
+                               rtol=2e-3, atol=2e-3)

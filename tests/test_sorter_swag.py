@@ -1,0 +1,96 @@
+"""Sorter network + SWAG behaviour (paper Fig. 4 semantics)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sort_pairs, sort_pairs_xla, bitonic_sort
+from repro.core.swag import frame_windows, num_windows, swag, swag_median
+from conftest import PY_OPS, py_group_aggregate
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 64, 100, 255, 256])
+def test_bitonic_matches_xla_sort(n, rng):
+    g = rng.integers(0, 17, n).astype(np.int32)
+    k = rng.integers(0, 1000, n).astype(np.int32)
+    bg, bk = sort_pairs(jnp.array(g), jnp.array(k))
+    xg, xk = sort_pairs_xla(jnp.array(g), jnp.array(k))
+    np.testing.assert_array_equal(np.array(bg), np.array(xg))
+    np.testing.assert_array_equal(np.array(bk), np.array(xk))
+
+
+def test_bitonic_group_only_sort(rng):
+    g = rng.integers(0, 5, 64).astype(np.int32)
+    k = rng.integers(0, 100, 64).astype(np.int32)
+    bg, bk = sort_pairs(jnp.array(g), jnp.array(k), full_width=False)
+    assert (np.diff(np.array(bg)) >= 0).all()
+    # multiset of (g,k) pairs preserved
+    assert sorted(zip(np.array(bg).tolist(), np.array(bk).tolist())) == \
+        sorted(zip(g.tolist(), k.tolist()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(xs=st.lists(st.integers(-1000, 1000), min_size=1, max_size=128))
+def test_property_bitonic_sorts(xs):
+    n = len(xs)
+    m = 1
+    while m < n:
+        m *= 2
+    arr = np.array(xs + [2**31 - 1] * (m - n), np.int32)
+    (out,) = bitonic_sort((jnp.array(arr),), num_keys=1)
+    np.testing.assert_array_equal(np.array(out)[:n], np.sort(xs))
+
+
+def test_frame_windows_reuse():
+    x = jnp.arange(16)
+    f = frame_windows(x, ws=8, wa=4)
+    assert f.shape == (3, 8)
+    np.testing.assert_array_equal(np.array(f[0]), np.arange(8))
+    np.testing.assert_array_equal(np.array(f[1]), np.arange(4, 12))
+
+
+@pytest.mark.parametrize("op", ["sum", "min", "max", "count", "mean"])
+@pytest.mark.parametrize("ws,wa", [(16, 16), (16, 8), (32, 8)])
+def test_swag_matches_per_window_oracle(op, ws, wa, rng):
+    g = rng.integers(0, 6, 96).astype(np.int32)
+    k = rng.integers(0, 50, 96).astype(np.int32)
+    res = swag(jnp.array(g), jnp.array(k), ws=ws, wa=wa, op=op,
+               use_xla_sort=True)
+    for w in range(num_windows(96, ws, wa)):
+        wg, wk = g[w * wa:w * wa + ws], k[w * wa:w * wa + ws]
+        og, ov = py_group_aggregate(wg, wk, PY_OPS[op])
+        n = int(res.num_groups[w])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.groups[w][:n]), og)
+        np.testing.assert_allclose(np.array(res.values[w][:n], np.float64),
+                                   ov, rtol=1e-6)
+
+
+def test_swag_median_oracle(rng):
+    """The paper's non-incremental showcase: median per group per window."""
+    g = rng.integers(0, 4, 64).astype(np.int32)
+    k = rng.integers(0, 100, 64).astype(np.int32)
+    res = swag_median(jnp.array(g), jnp.array(k), ws=16, wa=8,
+                      use_xla_sort=True)
+    for w in range(num_windows(64, 16, 8)):
+        wg, wk = g[w * 8:w * 8 + 16], k[w * 8:w * 8 + 16]
+        og, ov = py_group_aggregate(wg, wk, PY_OPS["median"])
+        n = int(res.num_groups[w])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.medians[w][:n]), ov)
+
+
+def test_swag_4k_window(rng):
+    """Paper: 'moderately large window sizes are up to 4K elements'."""
+    g = rng.integers(0, 64, 8192).astype(np.int32)
+    k = rng.integers(0, 1000, 8192).astype(np.int32)
+    res = swag(jnp.array(g), jnp.array(k), ws=4096, wa=4096, op="sum",
+               use_xla_sort=True)
+    assert res.groups.shape == (2, 4096)
+    for w in range(2):
+        og, ov = py_group_aggregate(g[w * 4096:(w + 1) * 4096],
+                                    k[w * 4096:(w + 1) * 4096], sum)
+        n = int(res.num_groups[w])
+        np.testing.assert_allclose(np.array(res.values[w][:n]), ov)

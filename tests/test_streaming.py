@@ -1,0 +1,98 @@
+"""Streaming (multi-batch rolling) semantics — the paper's non-blocking
+pipeline: results emitted exactly once, carries across batch boundaries,
+round-robin ports across the whole stream."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import StreamingAggregator
+from conftest import PY_OPS, py_group_aggregate
+
+
+def run_stream(g, k, op, batch, n_valid_last=None):
+    agg = StreamingAggregator(op, key_dtype=jnp.asarray(k).dtype)
+    got = {}
+    ports = []
+    nb = len(g) // batch
+    for i in range(nb):
+        r = agg.push(jnp.array(g[i * batch:(i + 1) * batch]),
+                     jnp.array(k[i * batch:(i + 1) * batch]))
+        for gi, vi, va, po in zip(np.array(r.groups), np.array(r.values),
+                                  np.array(r.valid), np.array(r.rr_port)):
+            if va:
+                assert int(gi) not in got, "group emitted twice"
+                got[int(gi)] = vi
+                ports.append(int(po))
+    r = agg.flush()
+    if bool(r.valid[0]):
+        got[int(r.groups[0])] = np.array(r.values)[0]
+        ports.append(int(r.rr_port[0]))
+    return got, ports
+
+
+@pytest.mark.parametrize("op", ["sum", "min", "max", "count", "mean"])
+@pytest.mark.parametrize("batch", [4, 16, 64])
+def test_streaming_equals_batch(op, batch, rng):
+    g = np.sort(rng.integers(0, 13, 128)).astype(np.int32)
+    k = rng.integers(0, 50, 128).astype(np.int32)
+    got, ports = run_stream(g, k, op, batch)
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    assert sorted(got) == og
+    np.testing.assert_allclose([got[gi] for gi in og], ov, rtol=1e-6)
+    # round-robin across the WHOLE stream (P=4 default)
+    np.testing.assert_array_equal(ports, np.arange(len(ports)) % 4)
+
+
+def test_group_spanning_many_batches(rng):
+    """A single group crossing 8 batch boundaries accumulates exactly once —
+    the paper's rolling n' count wider than P."""
+    g = np.zeros(64, np.int32)
+    k = np.ones(64, np.int32)
+    got, _ = run_stream(g, k, "count", 8)
+    assert got == {0: 64}
+
+
+def test_alternating_singletons(rng):
+    g = np.arange(32, dtype=np.int32)
+    k = rng.integers(0, 9, 32).astype(np.int32)
+    got, _ = run_stream(g, k, "sum", 4)
+    assert got == {int(gi): int(ki) for gi, ki in zip(g, k)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lengths=st.lists(st.integers(1, 6), min_size=1, max_size=12),
+    batch=st.sampled_from([4, 8]),
+    op=st.sampled_from(["sum", "count", "max"]),
+)
+def test_property_streaming_any_run_lengths(lengths, batch, op):
+    """Arbitrary group run lengths, padded to a batch multiple."""
+    g = np.concatenate([np.full(n, i, np.int32)
+                        for i, n in enumerate(lengths)])
+    rng = np.random.default_rng(sum(lengths))
+    k = rng.integers(0, 20, len(g)).astype(np.int32)
+    pad = (-len(g)) % batch
+    agg = StreamingAggregator(op)
+    got = {}
+    for i in range(0, len(g), batch):
+        bg, bk = g[i:i + batch], k[i:i + batch]
+        nv = None
+        if len(bg) < batch:
+            nv = jnp.asarray(len(bg))
+            bg = np.pad(bg, (0, batch - len(bg)))
+            bk = np.pad(bk, (0, batch - len(bk)))
+        r = agg.push(jnp.array(bg), jnp.array(bk), n_valid=nv)
+        for gi, vi, va in zip(np.array(r.groups), np.array(r.values),
+                              np.array(r.valid)):
+            if va:
+                assert int(gi) not in got
+                got[int(gi)] = vi
+    r = agg.flush()
+    if bool(r.valid[0]):
+        got[int(r.groups[0])] = np.array(r.values)[0]
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    assert sorted(got) == og
+    np.testing.assert_allclose([got[gi] for gi in og], ov, rtol=1e-6)

@@ -1,0 +1,175 @@
+"""Substrate tests: optimizer, checkpoint (atomic/retention/elastic resume),
+data pipeline determinism, gradient compression."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.data import DataConfig, DataPipeline
+from repro.data.stats import domain_stats
+from repro.distributed import compression as COMP
+from repro.optim import OptimizerConfig, adamw
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def quad_params():
+    return {"w": jnp.array([2.0, -3.0], jnp.float32),
+            "b": jnp.array([[1.0, 1.0], [0.5, -0.5]], jnp.float32)}
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                          total_steps=200, schedule="constant")
+    params = quad_params()
+    state = adamw.adamw_init(params, cfg)
+    for _ in range(150):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp sum(p^2)
+        params, state, m = adamw.adamw_update(params, grads, state, cfg)
+    assert float(adamw.global_norm(params)) < 1e-2
+
+
+def test_adamw_no_master_mode():
+    cfg = OptimizerConfig(lr=0.05, master_dtype="none",
+                          moment_dtype="bfloat16", weight_decay=0.0,
+                          warmup_steps=1, schedule="constant")
+    params = quad_params()
+    state = adamw.adamw_init(params, cfg)
+    assert "master" not in state
+    for _ in range(100):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state, _ = adamw.adamw_update(params, grads, state, cfg)
+    assert float(adamw.global_norm(params)) < 0.2
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(clip_norm=1.0)
+    params = quad_params()
+    state = adamw.adamw_init(params, cfg)
+    grads = jax.tree.map(lambda p: 1e6 * jnp.ones_like(p), params)
+    _, _, metrics = adamw.adamw_update(params, grads, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(adamw.lr_at_step(cfg, 0)) == 0.0
+    assert abs(float(adamw.lr_at_step(cfg, 10)) - 1.0) < 1e-6
+    assert float(adamw.lr_at_step(cfg, 100)) == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def tree_example():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": [jnp.zeros((2,), jnp.int32),
+                             jnp.full((3,), 7, jnp.float32)]}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = tree_example()
+    save(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    out, manifest = restore(str(tmp_path), 5, tree)
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomicity_tmp_ignored(tmp_path):
+    save(str(tmp_path), 1, tree_example())
+    # simulate a crashed half-written checkpoint
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree_example())
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_elastic_restore_different_sharding(tmp_path):
+    """Restore is sharding-agnostic (elastic re-mesh path)."""
+    tree = tree_example()
+    save(str(tmp_path), 7, tree)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = jax.tree.map(lambda _: sh, tree)
+    out, _ = restore(str(tmp_path), 7, tree, shardings=shardings)
+    np.testing.assert_array_equal(np.array(out["a"]), np.array(tree["a"]))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, {"a": jnp.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_resume():
+    cfg = DataConfig(vocab_size=1024, seq_len=16, global_batch=4, seed=3)
+    a = DataPipeline(cfg)
+    batches = [next(a) for _ in range(5)]
+    b = DataPipeline(cfg, start_step=3)  # resume mid-stream
+    resumed = next(b)
+    np.testing.assert_array_equal(batches[3]["tokens"], resumed["tokens"])
+
+
+def test_data_sharding_partition():
+    cfg = DataConfig(vocab_size=512, seq_len=8, global_batch=8, seed=1)
+    full = DataPipeline(cfg).make_batch(0)
+    assert full["tokens"].shape == (8, 8)
+    assert full["tokens"].max() < 512
+    assert (full["loss_mask"][:, -1] == 0).all()
+
+
+def test_domain_stats_engine():
+    domains = np.array([3, 1, 1, 3, 0], np.int32)
+    losses = np.array([1.0, 2.0, 4.0, 3.0, 5.0], np.float32)
+    stats = domain_stats(domains, losses, ops=("mean", "count"))
+    g, v, n = stats["mean"]
+    assert int(n) == 3
+    np.testing.assert_array_equal(np.array(g[:3]), [0, 1, 3])
+    np.testing.assert_allclose(np.array(v[:3]), [5.0, 3.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=256).astype(np.float32))
+    err = jnp.zeros_like(x)
+    total_sent = jnp.zeros_like(x)
+    # error feedback: accumulated dequantized stream converges to the signal
+    for _ in range(50):
+        q, scale, err = COMP.compress(x, err)
+        total_sent = total_sent + COMP.decompress(q, scale)
+    np.testing.assert_allclose(np.array(total_sent) / 50, np.array(x),
+                               atol=np.abs(np.array(x)).max() / 100)
+
+
+def test_compression_wire_format():
+    x = jnp.array([1.0, -127.0, 63.5, 0.0], jnp.float32)
+    q, scale, err = COMP.compress(x, jnp.zeros_like(x))
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.array(COMP.decompress(q, scale)),
+                               np.array(x), atol=float(scale))
