@@ -3,13 +3,32 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   complexity_table    -> paper Table I (entity model + fused-vs-modular HLO)
   speedup_groupby     -> paper §IV speedup protocol (distribution sweep)
-  swag_bench          -> paper §V / Fig. 4 SWAG throughput (incl. median)
+  swag_bench          -> paper §V / Fig. 4 SWAG throughput (incl. median,
+                         re-sort baseline vs pane path)
   sort_bench          -> sorter substrate (FLiMS role)
   moe_dispatch_bench  -> beyond-paper: engine-as-MoE-dispatch vs one-hot
+
+``swag_bench`` rows additionally land in ``BENCH_swag.json`` at the repo
+root — machine-readable (name, us_per_call, tuples_per_s) so the SWAG perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _write_swag_json(rows: list[dict]) -> None:
+    payload = [{"name": r["name"],
+                "us_per_call": r["us_per_call"],
+                "tuples_per_s": r["tuples_per_s"]}
+               for r in rows if "tuples_per_s" in r]
+    out = _REPO_ROOT / "BENCH_swag.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr, flush=True)
 
 
 def main() -> None:
@@ -27,9 +46,12 @@ def main() -> None:
     for name, mod in modules:
         if only and only != name:
             continue
-        for row in mod.run():
+        rows = mod.run()
+        for row in rows:
             print(f"{row['name']},{row['us_per_call']},{row['derived']}",
                   flush=True)
+        if name == "swag_bench":
+            _write_swag_json(rows)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
 """Paper Section V / Fig. 4: sliding-window aggregation throughput.
 
-Sweeps window sizes up to the paper's 4K "moderately large" bound, with
-WA = WS/2 (tuple reuse) and WA = WS, over incremental (sum) and
-non-incremental (median) operators — the median being the case the paper's
-sort-based design exists for.  Reports tuples/s through the fused pipeline.
+Sweeps window sizes up to the paper's 4K "moderately large" bound over
+WA in {WS, WS/2, WS/4, WS/8}, comparing the **re-sort baseline** (every
+window sorted from scratch) against the **pane path** (each WA-pane sorted
+once, windows assembled by bitonic merge / shared partial aggregates) for an
+incremental (sum) and a non-incremental (median) operator — the median being
+the case the paper's sort-based design exists for.
+
+Rows carry a numeric ``tuples_per_s`` so ``run.py`` can emit the
+machine-readable ``BENCH_swag.json`` tracked across PRs.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn
-from repro.core.swag import swag, swag_median
+from repro.core.swag import num_windows, swag, swag_median, swag_panes
 
 
 def run() -> list[dict]:
@@ -22,22 +27,32 @@ def run() -> list[dict]:
     k = jnp.array(rng.integers(0, 1000, n).astype(np.int32))
     rows = []
 
+    def add(name, fn, ws, wa):
+        us = time_fn(fn, g, k, iters=5, warmup=2)
+        nw = num_windows(n, ws, wa)
+        tput = nw * ws / (us / 1e6)
+        rows.append({
+            "name": name,
+            "us_per_call": round(us, 1),
+            "tuples_per_s": tput,
+            "derived": f"windows={nw} tuples_per_s={tput:.3e}",
+        })
+
     for ws in (256, 1024, 4096):
-        for wa in (ws, ws // 2):
+        for wa in (ws, ws // 2, ws // 4, ws // 8):
             for op in ("sum", "median"):
                 if op == "median":
-                    fn = jax.jit(lambda g, k, ws=ws, wa=wa: swag_median(
-                        g, k, ws=ws, wa=wa, use_xla_sort=True).medians)
+                    base = jax.jit(lambda g, k, ws=ws, wa=wa: swag_median(
+                        g, k, ws=ws, wa=wa, use_xla_sort=True,
+                        panes=False).medians)
                 else:
-                    fn = jax.jit(lambda g, k, ws=ws, wa=wa: swag(
-                        g, k, ws=ws, wa=wa, op="sum",
-                        use_xla_sort=True).values)
-                us = time_fn(fn, g, k, iters=5, warmup=2)
-                nw = (n - ws) // wa + 1
-                tput = nw * ws / (us / 1e6)
-                rows.append({
-                    "name": f"swag/{op}_ws{ws}_wa{wa}",
-                    "us_per_call": round(us, 1),
-                    "derived": f"windows={nw} tuples_per_s={tput:.3e}",
-                })
+                    base = jax.jit(lambda g, k, ws=ws, wa=wa: swag(
+                        g, k, ws=ws, wa=wa, op="sum", use_xla_sort=True,
+                        panes=False).values)
+                add(f"swag/{op}_ws{ws}_wa{wa}_resort", base, ws, wa)
+                if wa < ws:
+                    pane = jax.jit(lambda g, k, ws=ws, wa=wa, op=op:
+                                   swag_panes(g, k, ws=ws, wa=wa, op=op,
+                                              use_xla_sort=True)[1])
+                    add(f"swag/{op}_ws{ws}_wa{wa}_panes", pane, ws, wa)
     return rows

@@ -18,7 +18,10 @@ from repro.core.segscan import (  # noqa: F401
     Carry, exclusive_prefix_sum, init_carry, segment_ends, segment_starts,
     segmented_scan)
 from repro.core.sorter import (  # noqa: F401
-    bitonic_sort, next_pow2, sort_pairs, sort_pairs_xla)
+    bitonic_merge, bitonic_sort, merge_presorted, next_pow2, sort_pairs,
+    sort_pairs_xla)
 from repro.core.streaming import StreamingAggregator, StreamResult  # noqa: F401
-from repro.core.swag import frame_windows, num_windows, swag, swag_median  # noqa: F401
+from repro.core.swag import (  # noqa: F401
+    frame_panes, frame_windows, num_windows, pane_compatible, swag,
+    swag_median, swag_panes)
 from repro.core import complexity  # noqa: F401

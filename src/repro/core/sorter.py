@@ -7,12 +7,21 @@ vectorized compare-exchange sweeps over VPU lanes (log^2 depth, fully
 data-independent — no data-dependent control flow, exactly why it suits both
 FPGAs and TPUs).  A Pallas kernel version lives in ``kernels/bitonic``.
 
-Two entry points:
+Entry points:
   * :func:`bitonic_sort`      — the network itself (power-of-two, multi-operand,
                                 lexicographic by the leading ``num_keys`` operands)
+  * :func:`bitonic_merge`     — merge the two sorted halves of an array in
+                                log2(n) sweeps (vs log^2 for a full re-sort)
+  * :func:`merge_presorted`   — multiway merge of n/run presorted runs
+                                (log2(n/run) rounds of pairwise bitonic merges)
   * :func:`sort_pairs`        — convenience for (group, key) tuples w/ padding
   * :func:`sort_pairs_xla`    — ``jax.lax.sort`` baseline (XLA's sort) for
                                 large arrays & cross-checking
+
+The merge entry points are the core of the pane-based SWAG path
+(``core/swag.py``): panes are sorted **once** and windows are assembled by
+*merging* presorted panes, which is how the paper's double-buffered small
+sorters amortise work across overlapping windows.
 """
 from __future__ import annotations
 
@@ -68,6 +77,87 @@ def bitonic_sort(operands: tuple[Array, ...], num_keys: int = 1) -> tuple[Array,
             operands = _compare_exchange(operands, num_keys, j, k)
             j //= 2
         k *= 2
+    return operands
+
+
+def _reverse_odd_runs(x: Array, run: int) -> Array:
+    """Reverse the second ``run``-length run of every ``2*run`` block.
+
+    Two ascending runs become one bitonic sequence per block — the setup step
+    of a bitonic merge.  Expressed as reshape + flip (a static permutation;
+    no gather, so it lowers well both in XLA and in Pallas/Mosaic): view as
+    [..., N/(2*run), 2, run] and flip the odd run's lane axis.
+    """
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    xr = x.reshape(lead + (n // (2 * run), 2, run))
+    even = xr[..., 0, :]
+    odd = jnp.flip(xr[..., 1, :], axis=-1)
+    return jnp.stack([even, odd], axis=-2).reshape(lead + (n,))
+
+
+def _clean_sweeps(operands: tuple[Array, ...], num_keys: int,
+                  length: int) -> tuple[Array, ...]:
+    """Ascending compare-exchange sweeps j = length/2 .. 1 (reshape-pair
+    trick: partners ``i ^ j`` become adjacent on a middle axis, so each sweep
+    is a pure select — no gather).  Sorts each ``length``-sized bitonic
+    block; every pair is ascending, so ``swap`` is simply "higher < lower".
+    """
+    n = operands[0].shape[-1]
+    lead = operands[0].shape[:-1]
+    j = length // 2
+    while j >= 1:
+        m = n // (2 * j)
+
+        def reshaped(x):
+            return x.reshape(lead + (m, 2, j))
+
+        ops_r = tuple(reshaped(x) for x in operands)
+        a = tuple(x[..., 0, :] for x in ops_r)
+        b = tuple(x[..., 1, :] for x in ops_r)
+        swap = _lex_less(b[:num_keys], a[:num_keys])
+        new_a = tuple(jnp.where(swap, y, x) for x, y in zip(a, b))
+        new_b = tuple(jnp.where(swap, x, y) for x, y in zip(a, b))
+        operands = tuple(
+            jnp.stack([x, y], axis=-2).reshape(lead + (n,))
+            for x, y in zip(new_a, new_b))
+        j //= 2
+    return operands
+
+
+def bitonic_merge(operands: tuple[Array, ...], num_keys: int = 1
+                  ) -> tuple[Array, ...]:
+    """Merge the two sorted halves of each operand's last axis.
+
+    log2(n) compare-exchange sweeps — *one* merge stage instead of the full
+    log^2(n) re-sort.  Length must be a power of two and both halves must be
+    ascending by the leading ``num_keys`` operands.
+    """
+    n = operands[0].shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic_merge needs power-of-two length, got {n}")
+    return merge_presorted(operands, run=n // 2, num_keys=num_keys)
+
+
+def merge_presorted(operands: tuple[Array, ...], *, run: int,
+                    num_keys: int = 1) -> tuple[Array, ...]:
+    """Multiway merge of ``n/run`` presorted ascending runs of length ``run``.
+
+    log2(n/run) rounds; round r reverses every odd run (making each doubled
+    block bitonic) and cleans it with log2(2*run*2^r) ascending sweeps.
+    Total depth ~ log(n/run)*log(n) — the pane-path win over re-sorting
+    (log^2 n) when runs are long.  ``n``, ``run`` and ``n/run`` must be
+    powers of two.
+    """
+    n = operands[0].shape[-1]
+    if n & (n - 1) or run & (run - 1) or run < 1 or n % run:
+        raise ValueError(f"merge_presorted needs power-of-two length/run, "
+                         f"got n={n} run={run}")
+    length = run
+    while length < n:
+        operands = tuple(_reverse_odd_runs(x, length) for x in operands)
+        length *= 2
+        operands = _clean_sweeps(operands, num_keys, length)
     return operands
 
 

@@ -9,6 +9,31 @@ the sorter sees the whole window before flushing, *non-incremental* functions
 (median) get the group cardinalities for free — the paper's key argument for
 the sort-based SWAG design (vs. hash sets sized for the worst case).
 
+Pane architecture
+-----------------
+When ``WA < WS`` consecutive windows share ``WS - WA`` tuples, so re-sorting
+every window wastes the work the paper's double-buffered small sorters
+amortise.  The pane path (:func:`swag_panes`) partitions the stream into
+``WA``-sized **panes**, sorts each pane **once**, and assembles each window
+from its ``P = WS/WA`` presorted panes:
+
+  * **merge path** (median, mean, and any op without a single-array
+    incremental state): the P panes are merged with a bitonic *merge* network
+    (:func:`repro.core.sorter.merge_presorted`, ~log P * log WS sweeps
+    instead of the full log^2 WS re-sort).  A fully (group, key)-sorted
+    sequence of a multiset is unique, so the merged window is *identical* to
+    the re-sorted window and the downstream engine output is bit-exact.
+  * **shared-partial path** (sum / count / min / max): each pane is reduced
+    to per-group partial aggregates by **one** engine pass, and every window
+    combines its P panes' compacted partials (a group-only merge of P short
+    presorted runs + one engine pass with an identity-lift combiner).  The
+    per-tuple work is paid once per pane instead of once per window.
+
+Dispatch rules (:func:`swag` / :func:`swag_median` with ``panes=None``):
+the pane path is taken automatically when ``WS % WA == 0``, both are powers
+of two (the merge network's wiring constraint), and ``WA < WS``; otherwise
+the original re-sort path runs.  ``panes=True``/``False`` forces either.
+
 Windows are framed with a strided gather (the "simple buffering arrangement"
 that reuses tuples when WA < WS) and processed with ``vmap`` — the software
 analogue of the paper's double-buffered sorters.
@@ -22,8 +47,13 @@ import jax.numpy as jnp
 
 from repro.core import engine as _engine
 from repro.core import segscan, sorter
+from repro.core.combiners import Combiner, get_combiner
 
 Array = jax.Array
+
+#: ops whose engine state is a single array combined by an associative,
+#: commutative op with identity finalize — eligible for shared partials
+PARTIAL_OPS = frozenset({"sum", "count", "min", "max"})
 
 
 def num_windows(n: int, ws: int, wa: int) -> int:
@@ -39,14 +69,69 @@ def frame_windows(x: Array, ws: int, wa: int) -> Array:
     return x[..., idx]
 
 
+def pane_compatible(ws: int, wa: int) -> bool:
+    """True when the pane fast path applies: WS a multiple of WA, both powers
+    of two (the bitonic merge network's wiring constraint), WA < WS."""
+    return (0 < wa < ws and ws % wa == 0
+            and ws & (ws - 1) == 0 and wa & (wa - 1) == 0)
+
+
+def frame_panes(x: Array, wa: int, num_panes: int) -> Array:
+    """[N] -> [num_panes, WA] non-overlapping panes (trailing remainder that
+    can never complete a window is dropped)."""
+    return x[..., :num_panes * wa].reshape(x.shape[:-1] + (num_panes, wa))
+
+
+def resolve_panes(ws: int, wa: int, n: int, panes: bool | None, *,
+                  presorted: bool = False) -> bool:
+    """Resolve the shared ``panes`` tri-state used by every SWAG entry point.
+
+    ``None`` auto-dispatches (pane-compatible shapes, >= 1 window, input not
+    presorted); ``False`` forces the re-sort path; ``True`` forces panes and
+    *raises* when they cannot apply — never a silent fallback.
+    """
+    if panes is None:
+        return ((not presorted) and pane_compatible(ws, wa)
+                and num_windows(n, ws, wa) > 0)
+    if not panes:
+        return False
+    if presorted:
+        raise ValueError("panes=True cannot apply to presorted windows — "
+                         "the pane path frames and sorts the raw stream")
+    if not (pane_compatible(ws, wa) or (ws == wa and ws & (ws - 1) == 0)):
+        raise ValueError(f"pane path needs power-of-two WS/WA with WA "
+                         f"dividing WS, got ws={ws} wa={wa}")
+    if num_windows(n, ws, wa) == 0:
+        raise ValueError(f"no complete window: n={n} < ws={ws}")
+    return True
+
+
+def _pane_windows(panes: Array, nw: int, p: int) -> Array:
+    """[NP, WA, ...] -> [NW, P*WA, ...]: window w = panes w .. w+P-1."""
+    widx = jnp.arange(nw)[:, None] + jnp.arange(p)[None, :]
+    stacked = panes[widx]  # [NW, P, WA, ...]
+    return stacked.reshape((nw, p * panes.shape[1]) + panes.shape[2:])
+
+
 def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
-         presorted: bool = False, use_xla_sort: bool = False
-         ) -> _engine.GroupAggResult:
+         presorted: bool = False, use_xla_sort: bool = False,
+         panes: bool | None = None) -> _engine.GroupAggResult:
     """Sliding-window group-by-aggregate.
 
     Returns a :class:`GroupAggResult` whose arrays carry a leading
-    ``[num_windows]`` axis.
+    ``[num_windows]`` axis.  ``panes=None`` auto-dispatches to the
+    sort-once-per-pane fast path when :func:`pane_compatible` (see module
+    docstring); the result is element-exact either way.
     """
+    if op == "median":
+        # keep the contract shape-independent: median returns a different
+        # result type and has its own entry point
+        raise ValueError("op='median' is not a combiner — use swag_median "
+                         "(or swag_panes, which returns a MedianResult)")
+    if resolve_panes(ws, wa, groups.shape[-1], panes, presorted=presorted):
+        return swag_panes(groups, keys, ws=ws, wa=wa, op=op,
+                          use_xla_sort=use_xla_sort)
+
     gw = frame_windows(groups, ws, wa)
     kw = frame_windows(keys, ws, wa)
 
@@ -59,6 +144,111 @@ def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
     return jax.vmap(per_window)(gw, kw)
 
 
+def _sort_panes(groups: Array, keys: Array, *, ws: int, wa: int,
+                use_xla_sort: bool) -> tuple[Array, Array, int, int]:
+    """Frame + sort each pane once by (group, key). Returns (pg, pk, nw, p)."""
+    n = groups.shape[-1]
+    p = ws // wa
+    nw = num_windows(n, ws, wa)
+    np_ = nw + p - 1  # panes that participate in at least one window
+    pg = frame_panes(groups, wa, np_)
+    pk = frame_panes(keys, wa, np_)
+    srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
+    pg, pk = jax.vmap(lambda g, k: srt(g, k, full_width=True))(pg, pk)
+    return pg, pk, nw, p
+
+
+def swag_panes(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
+               use_xla_sort: bool = False, interpolate: bool = False):
+    """Pane-based SWAG: sort each WA-pane once, share it across the P = WS/WA
+    windows containing it.
+
+    ``op`` may be any registered combiner name, a :class:`Combiner`, or
+    ``"median"`` (returns :class:`MedianResult`; ``interpolate`` applies to
+    median only).  Requires :func:`pane_compatible` ``(ws, wa)`` or
+    ``wa == ws``, and at least one full window.  Element-exact vs. the
+    re-sort path (see module docstring).
+    """
+    resolve_panes(ws, wa, groups.shape[-1], True)  # validate or raise
+
+    pg, pk, nw, p = _sort_panes(groups, keys, ws=ws, wa=wa,
+                                use_xla_sort=use_xla_sort)
+
+    def merged_windows(tail):
+        """Assemble each window from its P presorted panes (bitonic merge
+        when P > 1 — a no-op for tumbling windows) and apply ``tail``."""
+        wg = _pane_windows(pg, nw, p)
+        wk = _pane_windows(pk, nw, p)
+
+        def per_window(g, k):
+            if p > 1:
+                g, k = sorter.merge_presorted((g, k), run=wa, num_keys=2)
+            return tail(g, k)
+
+        return jax.vmap(per_window)(wg, wk)
+
+    if op == "median":
+        return merged_windows(
+            lambda g, k: _median_sorted_window(g, k, interpolate=interpolate))
+
+    # float sums are kept on the merge path: combining per-pane partial sums
+    # reorders float additions (~ulp drift), while the merged window is the
+    # *identical* sequence the re-sort path feeds the engine — bit-exact.
+    reorder_sensitive = (op == "sum"
+                         and jnp.issubdtype(keys.dtype, jnp.floating))
+    if (isinstance(op, str) and op in PARTIAL_OPS and p > 1
+            and not reorder_sensitive):
+        return _swag_shared_partials(pg, pk, nw=nw, p=p, wa=wa, op=op)
+
+    return merged_windows(lambda g, k: _engine.group_by_aggregate(g, k, op))
+
+
+def _partial_combiner(comb: Combiner) -> Combiner:
+    """Combine already-aggregated per-pane partial values: identity lift over
+    the partial value array, same associative op (valid because PARTIAL_OPS
+    states are single arrays with identity finalize)."""
+    return Combiner(
+        name=comb.name + "_partial",
+        lift=lambda v: v,
+        op=comb.op,
+        finalize=comb.finalize,
+        identity=comb.identity,
+    )
+
+
+def _swag_shared_partials(pg: Array, pk: Array, *, nw: int, p: int, wa: int,
+                          op: str) -> _engine.GroupAggResult:
+    """The incremental fast path: one engine pass per pane, then per window a
+    group-only merge of P compacted partial runs + one combining engine pass.
+
+    Each pane's :class:`GroupAggResult` is an ascending run of *unique* group
+    ids (PAD_GROUP tail), so the P runs merge with the bitonic merge network
+    — partial values of one group meet as one segment and the identity-lift
+    combiner folds them with ``comb.op``.  The merge compares the full
+    (group, value) pair: group alone would suffice semantically (PARTIAL_OPS
+    are commutative) and unique-per-run groups keep every run
+    (group, value)-ascending anyway, but a key-only merge carrying the
+    values as pure *payload* has been observed to trigger a minutes-long
+    XLA:CPU compile (jax 0.4.37), so the values join the comparison instead.
+    """
+    comb = get_combiner(op)
+    partial = jax.vmap(
+        lambda g, k: _engine.group_by_aggregate(g, k, op))(pg, pk)
+
+    wg = _pane_windows(partial.groups, nw, p)   # [NW, P*WA]
+    wv = _pane_windows(partial.values, nw, p)
+    widx = jnp.arange(nw)[:, None] + jnp.arange(p)[None, :]
+    n_valid = jnp.sum(partial.num_groups[widx], axis=-1)  # [NW]
+
+    pcomb = _partial_combiner(comb)
+
+    def per_window(g, v, nv):
+        g, v = sorter.merge_presorted((g, v), run=wa, num_keys=2)
+        return _engine.group_by_aggregate(g, v, pcomb, n_valid=nv)
+
+    return jax.vmap(per_window)(wg, wv, n_valid)
+
+
 class MedianResult(NamedTuple):
     groups: Array   # [num_windows, WS]
     medians: Array  # [num_windows, WS] (float32 if interpolate else key dtype)
@@ -66,40 +256,55 @@ class MedianResult(NamedTuple):
     num_groups: Array  # [num_windows]
 
 
-def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
-                interpolate: bool = False, use_xla_sort: bool = False
-                ) -> MedianResult:
-    """Median per group per window — the paper's non-incremental example.
+def _median_sorted_window(g: Array, k: Array, *, interpolate: bool
+                          ) -> MedianResult:
+    """Median per group of one closed, (group, key)-sorted window.
 
     The sorter output is consumed *with* group cardinalities (paper: "append
     the median-related information such as group cardinality alongside the
-    data"): we take counts + group start offsets from one engine pass and pick
-    the middle element(s) of each group's sorted run.
+    data"): counts + group start offsets come from one engine pass and the
+    middle element(s) of each group's sorted run are picked out.
     """
+    counts = _engine.group_by_aggregate(g, k, "count")
+    n = g.shape[0]
+    starts = segscan.segment_starts(g)
+    seg_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
+    # start_pos[j] = index of first element of group j (scatter-min onto
+    # an identity-filled buffer)
+    start_pos = jnp.full((n,), n, jnp.int32).at[seg_id].min(
+        jnp.arange(n, dtype=jnp.int32), mode="drop",
+        indices_are_sorted=True)
+    cnt = counts.values.astype(jnp.int32)
+    lo_idx = start_pos + jnp.maximum(cnt - 1, 0) // 2
+    hi_idx = start_pos + cnt // 2
+    lo = k[jnp.clip(lo_idx, 0, n - 1)]
+    hi = k[jnp.clip(hi_idx, 0, n - 1)]
+    if interpolate:
+        med = (lo.astype(jnp.float32) + hi.astype(jnp.float32)) / 2.0
+    else:
+        med = lo  # lower median (stays in the key domain)
+    return MedianResult(counts.groups, med, counts.valid, counts.num_groups)
+
+
+def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
+                interpolate: bool = False, use_xla_sort: bool = False,
+                panes: bool | None = None) -> MedianResult:
+    """Median per group per window — the paper's non-incremental example.
+
+    Median has no incremental combiner, so the pane path (``panes=None``
+    auto-dispatch, same rules as :func:`swag`) keeps it *exact* by merging
+    the presorted panes into the fully sorted window before the rank pick.
+    """
+    if resolve_panes(ws, wa, groups.shape[-1], panes):
+        return swag_panes(groups, keys, ws=ws, wa=wa, op="median",
+                          use_xla_sort=use_xla_sort, interpolate=interpolate)
+
     gw = frame_windows(groups, ws, wa)
     kw = frame_windows(keys, ws, wa)
 
     def per_window(g, k):
         srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
         g, k = srt(g, k, full_width=True)
-        counts = _engine.group_by_aggregate(g, k, "count")
-        n = g.shape[0]
-        starts = segscan.segment_starts(g)
-        seg_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
-        # start_pos[j] = index of first element of group j (scatter-min onto
-        # an identity-filled buffer)
-        start_pos = jnp.full((n,), n, jnp.int32).at[seg_id].min(
-            jnp.arange(n, dtype=jnp.int32), mode="drop",
-            indices_are_sorted=True)
-        cnt = counts.values.astype(jnp.int32)
-        lo_idx = start_pos + jnp.maximum(cnt - 1, 0) // 2
-        hi_idx = start_pos + cnt // 2
-        lo = k[jnp.clip(lo_idx, 0, n - 1)]
-        hi = k[jnp.clip(hi_idx, 0, n - 1)]
-        if interpolate:
-            med = (lo.astype(jnp.float32) + hi.astype(jnp.float32)) / 2.0
-        else:
-            med = lo  # lower median (stays in the key domain)
-        return MedianResult(counts.groups, med, counts.valid, counts.num_groups)
+        return _median_sorted_window(g, k, interpolate=interpolate)
 
     return jax.vmap(per_window)(gw, kw)

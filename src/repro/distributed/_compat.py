@@ -1,0 +1,22 @@
+"""jax version compatibility shims for the distributed layer.
+
+``shard_map`` lives at ``jax.shard_map`` (with ``check_vma``) in newer
+releases but at ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``) in the 0.4.x line this container ships; route through one
+helper so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

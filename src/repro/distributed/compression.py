@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import _compat
+
 
 def compress(x, err):
     """x fp32/bf16 + error carry -> (int8 q, scale, new_err)."""
@@ -72,8 +74,8 @@ def make_pod_sync(mesh, grad_specs):
     out_specs = in_specs
 
     def pod_sync(grads, err):
-        return jax.shard_map(_tree_sync, mesh=mesh,
-                             in_specs=in_specs, out_specs=out_specs,
-                             check_vma=False)(grads, err)
+        return _compat.shard_map(_tree_sync, mesh=mesh,
+                                 in_specs=in_specs, out_specs=out_specs,
+                                 check=False)(grads, err)
 
     return pod_sync

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed import _compat
 from jax.sharding import PartitionSpec as P
 
 
@@ -78,9 +80,9 @@ def pipeline_apply(fn_stage, params_stages, x_mb, *, mesh,
     stage_spec = jax.tree.map(
         lambda _: P(pod_axis), params_stages,
         is_leaf=lambda x: hasattr(x, "shape"))
-    return jax.shard_map(
+    return _compat.shard_map(
         local, mesh=mesh,
         in_specs=(stage_spec, rep),
         out_specs=rep,
-        check_vma=False,
+        check=False,
     )(params_stages, x_mb)

@@ -3,7 +3,10 @@
   * segscan   — tiled rolling segmented scan (the PRRA scan network)
   * bitonic   — in-VMEM bitonic sorting network (FLiMS adaptation)
   * groupagg  — the FUSED 5-step group-by-aggregate engine (paper Fig. 2)
-  * swag      — fused sliding-window sort + aggregate (paper Fig. 4)
+  * swag      — fused sliding-window sort + aggregate (paper Fig. 4);
+                pane variant: sort WA-panes once, bitonic-merge P = WS/WA
+                presorted panes per window in VMEM (sort work amortised
+                across the P windows sharing each pane)
 
 Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd wrapper, auto interpret-mode on CPU) and ``ref.py``

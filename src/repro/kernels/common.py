@@ -139,6 +139,26 @@ def bitonic_sort_tile(operands: tuple[Array, ...], num_keys: int
     return operands
 
 
+def bitonic_merge_tile(operands: tuple[Array, ...], num_keys: int,
+                       run: int) -> tuple[Array, ...]:
+    """Multiway merge of T/run presorted ascending runs along the last axis.
+
+    The pane path's in-VMEM window assembly: log2(T/run) rounds of
+    (reverse odd runs, clean doubled blocks) — total depth
+    ~ log(T/run)*log(T) compare-exchange sweeps instead of the full
+    log^2(T) re-sort of :func:`bitonic_sort_tile`.  The shared
+    implementation (``core/sorter.merge_presorted``) is already pure
+    reshape/flip/select — no gathers, same Mosaic-friendliness as the sort
+    tile — so it is simply re-exported here with the tile assertions.
+    """
+    from repro.core import sorter as _sorter
+
+    t = operands[0].shape[-1]
+    assert t & (t - 1) == 0 and run >= 1 and run & (run - 1) == 0 \
+        and t % run == 0, f"need power-of-two tile/run, got T={t} run={run}"
+    return _sorter.merge_presorted(operands, run=run, num_keys=num_keys)
+
+
 def _lex_less(a: tuple[Array, ...], b: tuple[Array, ...]) -> Array:
     less = jnp.zeros(a[0].shape, bool)
     eq = jnp.ones(a[0].shape, bool)

@@ -1,8 +1,19 @@
-"""Pallas TPU kernel: fused sliding-window aggregation (paper Fig. 4).
+"""Pallas TPU kernels: fused sliding-window aggregation (paper Fig. 4).
 
-One grid row per window; per window, entirely in VMEM:
+Two variants share the in-VMEM engine/median tile code:
 
-    bitonic sort by (group, key)  ->  5-step engine  ->  compacted results
+* :func:`swag_pallas` — one grid row per window; per window, entirely in VMEM:
+
+      bitonic sort by (group, key)  ->  5-step engine  ->  compacted results
+
+* the **pane** pair :func:`sort_panes_pallas` + :func:`swag_pallas_panes` —
+  a prologue pass sorts each WA-sized pane tile *once* (grid over panes),
+  then the window pass reads the P = WS/WA presorted panes of window ``i``
+  (P overlapping BlockSpecs, rows ``i .. i+P-1``), concatenates them in VMEM
+  and *merges* with the bitonic merge network (~log P * log WS sweeps
+  instead of the full log^2 WS re-sort) before the same engine/median tail.
+  This amortises sorting across the P windows sharing each pane — the
+  software rendering of the paper's double-buffered small sorters.
 
 This is the paper's SWAG pipeline collapsed into a single kernel: "offload
 the design complexity to small-scale sorting, while benefiting from the
@@ -82,16 +93,95 @@ def _kernel(g_ref, k_ref, og_ref, ov_ref, oc_ref, *, combiner, median: bool):
     oc_ref[0, 0] = cnt[0]
 
 
+def _out_dtype(op: str, key_dtype):
+    if op == "median":
+        return key_dtype
+    combiner = get_combiner(op)
+    return jax.eval_shape(
+        lambda x: combiner.finalize(combiner.lift(x)),
+        jax.ShapeDtypeStruct((1,), key_dtype)).dtype
+
+
+def _sort_panes_kernel(g_ref, k_ref, og_ref, ok_ref):
+    g, k = common.bitonic_sort_tile((g_ref[0, :], k_ref[0, :]), num_keys=2)
+    og_ref[0, :] = g
+    ok_ref[0, :] = k
+
+
+def sort_panes_pallas(panes_g, panes_k, *, interpret: bool):
+    """Prologue: sort each [1, WA] pane tile once by (group, key)."""
+    np_, wa = panes_g.shape
+    block = pl.BlockSpec((1, wa), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sort_panes_kernel,
+        grid=(np_,),
+        in_specs=[block, block],
+        out_specs=[block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, wa), jnp.int32),
+            jax.ShapeDtypeStruct((np_, wa), panes_k.dtype),
+        ],
+        interpret=interpret,
+    )(panes_g, panes_k)
+
+
+def _pane_kernel(*refs, p: int, wa: int, combiner, median: bool):
+    g_refs, k_refs = refs[:p], refs[p:2 * p]
+    og_ref, ov_ref, oc_ref = refs[2 * p:]
+    g = jnp.concatenate([r[0, :] for r in g_refs], axis=-1)
+    k = jnp.concatenate([r[0, :] for r in k_refs], axis=-1)
+    # panes are presorted: merge network instead of a re-sort
+    g, k = common.bitonic_merge_tile((g, k), num_keys=2, run=wa)
+    if median:
+        cg, cv, cnt = _median_in_tile(g, k)
+    else:
+        cg, cv, cnt = _engine_in_tile(g, k, combiner)
+    og_ref[0, :] = cg
+    ov_ref[0, :] = cv
+    oc_ref[0, 0] = cnt[0]
+
+
+def swag_pallas_panes(panes_g, panes_k, op: str, *, p: int, interpret: bool):
+    """Window pass over presorted panes.
+
+    ``panes_*``: [NP, WA] sorted panes (from :func:`sort_panes_pallas`);
+    window ``i`` merges pane rows ``i .. i+p-1`` — expressed as ``p``
+    overlapping BlockSpecs over the same operand, one per pane offset.
+    """
+    np_, wa = panes_g.shape
+    nw = np_ - p + 1
+    ws = p * wa
+    median = op == "median"
+    combiner = None if median else get_combiner(op)
+    out_dtype = _out_dtype(op, panes_k.dtype)
+
+    kern = functools.partial(_pane_kernel, p=p, wa=wa, combiner=combiner,
+                             median=median)
+    pane_specs = [pl.BlockSpec((1, wa), lambda i, off=off: (i + off, 0))
+                  for off in range(p)]
+    out_block = pl.BlockSpec((1, ws), lambda i: (i, 0))
+    cnt_block = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    og, ov, oc = pl.pallas_call(
+        kern,
+        grid=(nw,),
+        in_specs=pane_specs + pane_specs,
+        out_specs=[out_block, out_block, cnt_block],
+        out_shape=[
+            jax.ShapeDtypeStruct((nw, ws), jnp.int32),
+            jax.ShapeDtypeStruct((nw, ws), out_dtype),
+            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*([panes_g] * p + [panes_k] * p))
+    return og, ov, oc[:, 0]
+
+
 def swag_pallas(frames_g, frames_k, op: str, *, interpret: bool):
     """frames_*: [NW, WS] framed windows, WS a power of two."""
     nw, ws = frames_g.shape
     median = op == "median"
     combiner = None if median else get_combiner(op)
-    if median:
-        out_dtype = frames_k.dtype
-    else:
-        out_dtype = jax.eval_shape(
-            lambda x: combiner.finalize(combiner.lift(x)), frames_k).dtype
+    out_dtype = _out_dtype(op, frames_k.dtype)
 
     kern = functools.partial(_kernel, combiner=combiner, median=median)
     block = pl.BlockSpec((1, ws), lambda i: (i, 0))

@@ -1,4 +1,14 @@
-"""jit'd public wrapper for the fused SWAG kernel."""
+"""jit'd public wrapper for the fused SWAG kernels.
+
+Dispatch (``panes=None``): when ``WS % WA == 0``, both powers of two and
+``WA < WS``, the pane pair runs — panes sorted once in a prologue
+``pallas_call`` (grid over panes), windows assembled by merging their
+``P = WS/WA`` presorted panes in VMEM (grid over windows) — amortising the
+sort across the P windows sharing each pane.  Otherwise each window is
+re-sorted from scratch.  Results are element-exact either way: a fully
+(group, key)-sorted window is unique, so both paths feed the identical
+sequence to the identical engine tail.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import PAD_GROUP
-from repro.core.swag import frame_windows
+from repro.core.swag import frame_panes, frame_windows, num_windows, \
+    resolve_panes
 
 
 class SwagResult(NamedTuple):
@@ -22,13 +33,17 @@ def _is_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(jax.jit, static_argnames=("ws", "wa", "op", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("ws", "wa", "op", "interpret", "panes"))
 def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
-             interpret: bool | None = None) -> SwagResult:
+             interpret: bool | None = None,
+             panes: bool | None = None) -> SwagResult:
     """Sliding-window aggregate: last ``ws`` tuples per group, advance ``wa``.
 
     ``op`` may be any registered combiner name or ``"median"`` (the paper's
     non-incremental showcase).  WS must be a power of two (pad otherwise).
+    ``panes`` forces (True) or suppresses (False) the sort-once pane path;
+    ``None`` auto-dispatches (see module docstring).
     """
     if interpret is None:
         interpret = _is_cpu()
@@ -36,9 +51,23 @@ def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
         raise ValueError(f"WS must be a power of two, got {ws}")
     from repro.kernels.swag import kernel as _k
 
-    fg = frame_windows(groups.astype(jnp.int32), ws, wa)
-    fk = frame_windows(keys, ws, wa)
-    og, ov, oc = _k.swag_pallas(fg, fk, op, interpret=interpret)
+    nw = num_windows(groups.shape[-1], ws, wa)
+    panes = resolve_panes(ws, wa, groups.shape[-1], panes)
+
+    # wa == ws means one pane per window: the "merge" degenerates to the
+    # plain per-window sort, which is exactly the classic fused kernel.
+    if panes and wa < ws:
+        p = ws // wa
+        np_ = nw + p - 1
+        pg = frame_panes(groups.astype(jnp.int32), wa, np_)
+        pk = frame_panes(keys, wa, np_)
+        pg, pk = _k.sort_panes_pallas(pg, pk, interpret=interpret)
+        og, ov, oc = _k.swag_pallas_panes(pg, pk, op, p=p,
+                                          interpret=interpret)
+    else:
+        fg = frame_windows(groups.astype(jnp.int32), ws, wa)
+        fk = frame_windows(keys, ws, wa)
+        og, ov, oc = _k.swag_pallas(fg, fk, op, interpret=interpret)
     valid = jnp.arange(ws)[None, :] < oc[:, None]
     og = jnp.where(valid, og, PAD_GROUP)
     return SwagResult(og, ov, valid, oc)

@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the SWAG kernel: core swag / swag_median."""
+"""Pure-jnp oracle for the SWAG kernels: core swag / swag_median.
+
+``panes=False`` is forced so the oracle stays the independent re-sort path
+(``lax.sort`` per window + engine) even for pane-compatible (WS, WA) — the
+kernels' pane variant must match it element-exactly.
+"""
 from __future__ import annotations
 
 from repro.core.swag import swag as _swag
@@ -7,7 +12,9 @@ from repro.core.swag import swag_median as _swag_median
 
 def swag_ref(groups, keys, *, ws: int, wa: int, op="sum"):
     if op == "median":
-        m = _swag_median(groups, keys, ws=ws, wa=wa, use_xla_sort=True)
+        m = _swag_median(groups, keys, ws=ws, wa=wa, use_xla_sort=True,
+                         panes=False)
         return m.groups, m.medians, m.valid, m.num_groups
-    r = _swag(groups, keys, ws=ws, wa=wa, op=op, use_xla_sort=True)
+    r = _swag(groups, keys, ws=ws, wa=wa, op=op, use_xla_sort=True,
+              panes=False)
     return r.groups, r.values, r.valid, r.num_groups

@@ -1,0 +1,122 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Provides just enough of the ``given`` / ``settings`` / ``strategies`` surface
+for this repo's property tests to *run* (deterministic pseudo-random examples
+drawn from a seed derived from the test name) instead of killing collection
+with ``ModuleNotFoundError``.  It is installed into ``sys.modules`` by
+``conftest.py`` only when the real package is absent; with hypothesis
+installed this module is inert.
+
+No shrinking, no database, no reproduction strings — failures report the
+drawn example in the assertion traceback and are reproducible because the
+draw sequence is a pure function of the test name.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+
+class _Strategy:
+    """A strategy is just a draw function: rng -> example."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           allow_infinity: bool = False, **_ignored) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+    just = staticmethod(just)
+
+
+strategies = _StrategiesModule()
+st = strategies
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator: records ``max_examples`` on the (already @given-wrapped)
+    test function; everything else (deadline, ...) is ignored."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies: _Strategy):
+    """Decorator: run the test ``max_examples`` times with drawn kwargs.
+
+    The RNG seed is derived from the test name (crc32) so runs are
+    deterministic across processes regardless of PYTHONHASHSEED.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # settings() may sit above @given (stamps the wrapper) or below
+            # it (stamps fn) — both orders are legal with real hypothesis
+            max_ex = getattr(wrapper, "_fallback_max_examples",
+                             getattr(fn, "_fallback_max_examples",
+                                     _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(max_ex):
+                drawn = {name: s.example(rng)
+                         for name, s in named_strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must not inject fixtures for the strategy-provided params
+        wrapper.__wrapped__ = None
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

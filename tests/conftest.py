@@ -1,11 +1,27 @@
 """Shared fixtures + Python oracles.  NOTE: no XLA_FLAGS here — smoke tests
-and benches must see 1 device; only dryrun.py forces 512."""
+and benches must see 1 device; only dryrun.py forces 512.
+
+If ``hypothesis`` is not installed, a deterministic fallback shim
+(``_hypothesis_fallback``) is registered under its name *before* test modules
+are collected, so ``from hypothesis import given, ...`` keeps working and
+tier-1 runs everywhere (the property tests then draw seeded pseudo-random
+examples instead of shrunk ones).
+"""
 from __future__ import annotations
 
 import collections
+import sys
 
 import numpy as np
 import pytest
+
+try:  # pragma: no cover - exercised implicitly by every property test
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
 
 
 def py_group_aggregate(groups, keys, fn):
