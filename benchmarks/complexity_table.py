@@ -61,7 +61,7 @@ def run() -> list[dict]:
     g = jnp.array(np.sort(rng.integers(0, 256, n)).astype(np.int32))
     k = jnp.array(rng.integers(0, 1000, n).astype(np.int32))
 
-    fused = jax.jit(lambda g, k: engine.group_by_aggregate(g, k, "sum"))
+    fused = jax.jit(lambda g, k: engine._group_by_aggregate(g, k, "sum"))
     modular = jax.jit(lambda g, k: modular_group_by(g, k, "sum"))
     # correctness cross-check before timing
     a, b = fused(g, k), modular(g, k)

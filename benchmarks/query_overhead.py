@@ -1,0 +1,131 @@
+"""Planner + dispatch overhead of the unified query API (repro.query).
+
+Three questions, one workload (WS=1024, WA=256 sliding sum over 32K tuples):
+
+  * what does ``plan()`` cost?  (pure-Python, paid once per query shape)
+  * does ``execute(plan, ...)`` add anything over calling the backend
+    implementation directly once jitted?  (it must not — the plan is static
+    and the dispatch traces away)
+  * what does multi-op **fusion** buy?  ``Query(ops=("sum","min","dc"))``
+    in one fused pass vs the same three ops as separate single-op queries.
+    The fused path must frame + sort the panes exactly once — asserted here
+    by counting sorter invocations at trace time (each single-op query
+    traces its own pane sort; the fused query traces one).
+
+Rows carry ``tuples_per_s`` so ``run.py`` emits them into
+``BENCH_swag.json`` — dispatch-overhead regressions show up in the tracked
+numbers, not just in this module's stdout.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import sorter as _sorter_mod
+from repro.core.swag import _swag, num_windows
+from repro.query import Query, Window, execute, plan
+
+WS, WA, N = 1024, 256, 32768
+OPS = ("sum", "min", "dc")
+
+
+def _count_pane_sorts(fn, *args) -> int:
+    """Trace ``fn`` once and count how often the pane/window sorter is
+    entered (vmap traces its body once, so each logical sort site counts
+    once regardless of how many panes it maps over)."""
+    calls = [0]
+    orig = _sorter_mod.sort_pairs_xla
+
+    def counting(*a, **kw):
+        calls[0] += 1
+        return orig(*a, **kw)
+
+    _sorter_mod.sort_pairs_xla = counting
+    try:
+        jax.make_jaxpr(fn)(*args)
+    finally:
+        _sorter_mod.sort_pairs_xla = orig
+    return calls[0]
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(3)
+    g = jnp.array(rng.integers(0, 32, N).astype(np.int32))
+    k = jnp.array(rng.integers(0, 1000, N).astype(np.int32))
+    nw = num_windows(N, WS, WA)
+    rows = []
+
+    def add(name, us, *, windows_per_call=nw, derived=""):
+        tput = windows_per_call * WS / (us / 1e6)
+        rows.append({
+            "name": name,
+            "us_per_call": round(us, 1),
+            "tuples_per_s": tput,
+            "derived": derived or f"windows={windows_per_call} "
+                                  f"tuples_per_s={tput:.3e}",
+        })
+
+    # --- planner cost (pure Python, no arrays touched) -------------------
+    q1 = Query(ops=("sum",), window=Window(ws=WS, wa=WA))
+    t0 = time.perf_counter()
+    iters = 200
+    for _ in range(iters):
+        plan(q1, backend="reference")
+    plan_us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append({
+        "name": "query/plan_us",
+        "us_per_call": round(plan_us, 1),
+        "derived": "pure-Python planning cost per plan() call",
+    })
+
+    # --- dispatch overhead: direct backend call vs planned execute -------
+    direct = jax.jit(lambda g, k: _swag(
+        g, k, ws=WS, wa=WA, op="sum", use_xla_sort=True).values)
+    p1 = plan(q1, backend="reference")
+    via_query = jax.jit(lambda g, k: execute(
+        p1, g, k, use_xla_sort=True)[0].values["sum"])
+    us_direct = time_fn(direct, g, k, iters=5, warmup=2)
+    us_query = time_fn(via_query, g, k, iters=5, warmup=2)
+    add("query/direct_call", us_direct)
+    add("query/planned_execute", us_query,
+        derived=f"overhead_vs_direct={us_query - us_direct:+.1f}us")
+
+    # --- multi-op fusion: one fused pass vs three single-op queries ------
+    qm = Query(ops=OPS, window=Window(ws=WS, wa=WA))
+    pm = plan(qm, backend="reference")
+    fused = jax.jit(lambda g, k: execute(
+        pm, g, k, use_xla_sort=True)[0].values)
+    singles = [plan(Query(ops=(op,), window=Window(ws=WS, wa=WA)),
+                    backend="reference") for op in OPS]
+    # the pre-refactor workload: one jitted call per op (SWAG had no
+    # multi-op path), so nothing shares the pane sort across ops — keeping
+    # them in one jit would let XLA CSE the sorts and hide exactly the
+    # redundancy the fused path removes
+    single_fns = [jax.jit(lambda g, k, p=p: execute(
+        p, g, k, use_xla_sort=True)[0].values) for p in singles]
+
+    def per_op(g, k):
+        return [f(g, k) for f in single_fns]
+
+    sorts_fused = _count_pane_sorts(
+        lambda g, k: execute(pm, g, k, use_xla_sort=True)[0].values, g, k)
+    sorts_single = _count_pane_sorts(
+        lambda g, k: [execute(p, g, k, use_xla_sort=True)[0].values
+                      for p in singles], g, k)
+    assert sorts_fused == 1, \
+        f"fused multi-op query must sort once, traced {sorts_fused} sorts"
+    assert sorts_single == len(OPS), \
+        f"expected one sort per single-op query, got {sorts_single}"
+
+    us_fused = time_fn(fused, g, k, iters=5, warmup=2)
+    us_per_op = time_fn(per_op, g, k, iters=5, warmup=2)
+    add(f"query/multi{len(OPS)}_fused", us_fused,
+        derived=f"sorts_traced={sorts_fused} windows={nw}")
+    add(f"query/multi{len(OPS)}_per_op", us_per_op,
+        derived=f"sorts_traced={sorts_single} windows={nw} "
+                f"fused_speedup={us_per_op / us_fused:.2f}x")
+    return rows

@@ -5,12 +5,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   speedup_groupby     -> paper §IV speedup protocol (distribution sweep)
   swag_bench          -> paper §V / Fig. 4 SWAG throughput (incl. median,
                          re-sort baseline vs pane path)
+  query_overhead      -> repro.query planner+dispatch cost vs direct calls
+                         + fused multi-op vs per-op (sort-once asserted)
   sort_bench          -> sorter substrate (FLiMS role)
   moe_dispatch_bench  -> beyond-paper: engine-as-MoE-dispatch vs one-hot
 
-``swag_bench`` rows additionally land in ``BENCH_swag.json`` at the repo
-root — machine-readable (name, us_per_call, tuples_per_s) so the SWAG perf
-trajectory is tracked across PRs.
+``swag_bench`` and ``query_overhead`` rows additionally land in
+``BENCH_swag.json`` at the repo root — machine-readable (name, us_per_call,
+tuples_per_s) so the SWAG perf + dispatch-overhead trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -19,6 +22,9 @@ import pathlib
 import sys
 
 _REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+#: modules whose rows feed the tracked BENCH_swag.json
+_JSON_MODULES = ("swag_bench", "query_overhead")
 
 
 def _write_swag_json(rows: list[dict]) -> None:
@@ -32,17 +38,21 @@ def _write_swag_json(rows: list[dict]) -> None:
 
 
 def main() -> None:
-    from benchmarks import (complexity_table, moe_dispatch_bench, sort_bench,
-                            speedup_groupby, swag_bench)
+    from benchmarks import (complexity_table, moe_dispatch_bench,
+                            query_overhead, sort_bench, speedup_groupby,
+                            swag_bench)
     modules = [
         ("complexity_table", complexity_table),
         ("speedup_groupby", speedup_groupby),
         ("swag_bench", swag_bench),
+        ("query_overhead", query_overhead),
         ("sort_bench", sort_bench),
         ("moe_dispatch_bench", moe_dispatch_bench),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
+    json_rows: list[dict] = []
+    ran = []
     for name, mod in modules:
         if only and only != name:
             continue
@@ -50,8 +60,31 @@ def main() -> None:
         for row in rows:
             print(f"{row['name']},{row['us_per_call']},{row['derived']}",
                   flush=True)
-        if name == "swag_bench":
-            _write_swag_json(rows)
+        if name in _JSON_MODULES:
+            json_rows.extend(rows)
+            ran.append(name)
+    # only rewrite the tracked json when every contributing module ran
+    # (a single-module invocation must not drop the other module's rows)
+    if ran and (only or set(ran) == set(_JSON_MODULES)):
+        if only:
+            _merge_swag_json(json_rows)
+        else:
+            _write_swag_json(json_rows)
+
+
+def _merge_swag_json(rows: list[dict]) -> None:
+    out = _REPO_ROOT / "BENCH_swag.json"
+    existing = []
+    if out.exists():
+        existing = json.loads(out.read_text())
+    new_names = {r["name"] for r in rows}
+    payload = [e for e in existing if e["name"] not in new_names]
+    payload += [{"name": r["name"],
+                 "us_per_call": r["us_per_call"],
+                 "tuples_per_s": r["tuples_per_s"]}
+                for r in rows if "tuples_per_s" in r]
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# merged into {out}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn, time_py
-from repro.core import engine, sorter
+from repro.core import sorter
+from repro.query import Query, execute, plan
 
 
 def serial_baseline(g: np.ndarray, k: np.ndarray):
@@ -39,8 +40,9 @@ def run() -> list[dict]:
     rng = np.random.default_rng(1)
     rows = []
 
-    pipeline = jax.jit(lambda g, k: engine.group_by_aggregate(
-        *sorter.sort_pairs_xla(g, k, full_width=False), "sum"))
+    q = plan(Query(ops=("sum",)), backend="reference")
+    pipeline = jax.jit(lambda g, k: execute(
+        q, *sorter.sort_pairs_xla(g, k, full_width=False))[0])
 
     for n_groups in (1, 16, 256, 4096, 16384):
         g = rng.integers(0, n_groups, n).astype(np.int32)
@@ -55,7 +57,7 @@ def run() -> list[dict]:
         og, ov = serial_baseline(g, k)
         m = int(res.num_groups)
         assert m == len(og)
-        np.testing.assert_array_equal(np.array(res.values[:m]), ov)
+        np.testing.assert_array_equal(np.array(res.values["sum"][:m]), ov)
 
         rows.append({
             "name": f"speedup/groups_{n_groups}",

@@ -7,6 +7,10 @@ once, windows assembled by bitonic merge / shared partial aggregates) for an
 incremental (sum) and a non-incremental (median) operator — the median being
 the case the paper's sort-based design exists for.
 
+Both arms are declarative queries on the unified API: the pane choice is
+``Window(panes=...)`` in the spec, planned once and executed through the
+reference backend (``use_xla_sort=True`` keeps the sorter substrate equal).
+
 Rows carry a numeric ``tuples_per_s`` so ``run.py`` can emit the
 machine-readable ``BENCH_swag.json`` tracked across PRs.
 """
@@ -17,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn
-from repro.core.swag import num_windows, swag, swag_median, swag_panes
+from repro.core.swag import num_windows
+from repro.query import Query, Window, execute, plan
 
 
 def run() -> list[dict]:
@@ -38,21 +43,18 @@ def run() -> list[dict]:
             "derived": f"windows={nw} tuples_per_s={tput:.3e}",
         })
 
+    def arm(op, ws, wa, panes):
+        p = plan(Query(ops=(op,), window=Window(ws=ws, wa=wa, panes=panes)),
+                 backend="reference")
+        return jax.jit(lambda g, k: execute(
+            p, g, k, use_xla_sort=True)[0].values[op])
+
     for ws in (256, 1024, 4096):
         for wa in (ws, ws // 2, ws // 4, ws // 8):
             for op in ("sum", "median"):
-                if op == "median":
-                    base = jax.jit(lambda g, k, ws=ws, wa=wa: swag_median(
-                        g, k, ws=ws, wa=wa, use_xla_sort=True,
-                        panes=False).medians)
-                else:
-                    base = jax.jit(lambda g, k, ws=ws, wa=wa: swag(
-                        g, k, ws=ws, wa=wa, op="sum", use_xla_sort=True,
-                        panes=False).values)
-                add(f"swag/{op}_ws{ws}_wa{wa}_resort", base, ws, wa)
+                add(f"swag/{op}_ws{ws}_wa{wa}_resort", arm(op, ws, wa, False),
+                    ws, wa)
                 if wa < ws:
-                    pane = jax.jit(lambda g, k, ws=ws, wa=wa, op=op:
-                                   swag_panes(g, k, ws=ws, wa=wa, op=op,
-                                              use_xla_sort=True)[1])
-                    add(f"swag/{op}_ws{ws}_wa{wa}_panes", pane, ws, wa)
+                    add(f"swag/{op}_ws{ws}_wa{wa}_panes",
+                        arm(op, ws, wa, True), ws, wa)
     return rows

@@ -8,7 +8,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import group_by_aggregate, sort_pairs_xla
+from repro.core import sort_pairs_xla
+from repro.query import Query, execute
 from repro.models import moe as MOE
 
 
@@ -23,10 +24,11 @@ def main():
     ge, gt = sort_pairs_xla(jnp.array(experts.reshape(-1)),
                             jnp.arange(n * k, dtype=jnp.int32),
                             full_width=False)
-    load = group_by_aggregate(ge, gt, "count")
+    load, _ = execute(Query(ops=("count",)), ge, gt)
     ne = int(load.num_groups)
     print("per-expert token load (engine group-by-count):")
-    for gi, ci in zip(np.array(load.groups[:ne]), np.array(load.values[:ne])):
+    for gi, ci in zip(np.array(load.groups[:ne]),
+                      np.array(load.values["count"][:ne])):
         print(f"  expert {gi}: {ci} tokens")
 
     y_sorted, s1 = MOE.moe_sorted(params, x, num_experts=e,

@@ -1,18 +1,18 @@
-"""Quickstart: the paper's engine in five minutes.
+"""Quickstart: the paper's engine in five minutes — via the unified query API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers: the SQL group-by-aggregate of the paper's Algorithm 1, all engine
-operators (incl. the dc variant's distinct count), the streaming multi-batch
-driver with round-robin ports, and the fused Pallas kernel (interpret mode
-on CPU, Mosaic on TPU).
+Covers: the SQL group-by-aggregate of the paper's Algorithm 1 as a declarative
+``Query``, multi-op fusion (one engine pass, many ``function_select``
+operators incl. the dc variant's distinct count), the streaming multi-batch
+driver with round-robin ports, and backend dispatch onto the fused Pallas
+kernel (interpret mode on CPU, Mosaic on TPU).
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (StreamingAggregator, group_by_aggregate,
-                        sort_pairs_xla)
-from repro.kernels.groupagg.ops import group_by_aggregate_tpu
+from repro.core import StreamingAggregator, sort_pairs_xla
+from repro.query import Query, execute, plan
 
 
 def main():
@@ -23,19 +23,22 @@ def main():
     # ------------------------------------------------------------------
     groups = rng.integers(0, 8, 64).astype(np.int32)   # table0.key1
     keys = rng.integers(0, 100, 64).astype(np.int32)   # table0.key2
-    g, k = sort_pairs_xla(jnp.array(groups), jnp.array(keys))  # the sorter
-    res = group_by_aggregate(g, k, "sum")               # the engine
+    g, k = sort_pairs_xla(jnp.array(groups), jnp.array(keys),
+                          full_width=True)             # the sorter
+    res, _ = execute(Query(ops=("sum",)), g, k)        # the engine
     n = int(res.num_groups)
     print("SELECT g, sum(k) GROUP BY g ->")
-    for gi, vi in zip(np.array(res.groups[:n]), np.array(res.values[:n])):
+    for gi, vi in zip(np.array(res.groups[:n]), np.array(res.values["sum"][:n])):
         print(f"  group {gi}: {vi}")
 
     # ------------------------------------------------------------------
-    # function_select: one engine, many operators (incl. distinct count)
+    # function_select: one engine pass, many operators (incl. distinct
+    # count — "dc" in the paper) — the fused multi-op query
     # ------------------------------------------------------------------
-    for op in ("min", "max", "count", "mean", "distinct_count"):
-        r = group_by_aggregate(g, k, op)
-        print(f"{op:15s} -> {np.array(r.values[:n])}")
+    multi = Query(ops=("min", "max", "count", "mean", "dc"))
+    res_multi, _ = execute(multi, g, k)
+    for name, vals in res_multi.values.items():
+        print(f"{name:15s} -> {np.array(vals[:n])}")
 
     # ------------------------------------------------------------------
     # streaming: batches of P tuples, rolling carry, round-robin ports
@@ -54,12 +57,16 @@ def main():
           f"{int(np.array(out.values)[0])}, port {int(out.rr_port[0])})")
 
     # ------------------------------------------------------------------
-    # the fused Pallas kernel (5 steps in one VMEM pass)
+    # backend dispatch: same Query on the fused Pallas kernel (5 steps in
+    # one VMEM pass); `backend="auto"` / REPRO_BACKEND picks per platform
     # ------------------------------------------------------------------
-    rk = group_by_aggregate_tpu(g, k, "sum", tile=256)
+    q = Query(ops=("sum",))
+    print(f"auto plan on this host: {plan(q).backend}")
+    rk, _ = execute(q, g, k, backend="pallas", tile=256)
     assert int(rk.num_groups) == n
-    assert np.array_equal(np.array(rk.values[:n]), np.array(res.values[:n]))
-    print("pallas kernel matches reference: OK")
+    assert np.array_equal(np.array(rk.values["sum"][:n]),
+                          np.array(res.values["sum"][:n]))
+    print("pallas backend matches reference: OK")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,16 @@
 """Real-time sliding-window statistics — the paper's SWAG scenario
 ("bank security and medical sensors"): a stream of (sensor_id, reading)
-tuples, queries of the form "median of the last WS readings per sensor,
-advancing by WA", served by the fused SWAG kernel.
+tuples, one declarative query — "median / max / mean / distinct count of the
+last WS readings per sensor, advancing by WA" — lowered onto the fused SWAG
+kernels by the query planner.  All four operators ride a single sort /
+pane-merge pass (the fused multi-op path).
 
     PYTHONPATH=src python examples/swag_streaming.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.swag.ops import swag_tpu
+from repro.query import Query, Window, execute, plan
 
 
 def main():
@@ -20,28 +22,27 @@ def main():
     readings = (base + rng.normal(0, 4, n)).astype(np.int32)
     readings[rng.random(n) < 0.01] += 120  # anomaly spikes
 
-    ws, wa = 256, 128
-    for op in ("median", "max", "mean", "distinct_count"):
-        res = swag_tpu(jnp.array(sensors), jnp.array(readings),
-                       ws=ws, wa=wa, op=op)
-        last = res.groups.shape[0] - 1
-        nl = int(res.num_groups[last])
-        vals = np.array(res.values[last, :nl])
-        gs = np.array(res.groups[last, :nl])
-        print(f"{op:15s} last window: " +
-              " ".join(f"s{g}={v:.0f}" if op == "mean" else f"s{g}={v}"
-                       for g, v in zip(gs, vals)))
+    q = Query(ops=("median", "max", "mean", "dc"),
+              window=Window(ws=256, wa=128))
+    p = plan(q, backend="pallas-panes")   # or None: auto / REPRO_BACKEND
+    res, _ = execute(p, jnp.array(sensors), jnp.array(readings))
 
-    # anomaly check: window max far above window median flags a spike
-    med = swag_tpu(jnp.array(sensors), jnp.array(readings), ws=ws, wa=wa,
-                   op="median")
-    mx = swag_tpu(jnp.array(sensors), jnp.array(readings), ws=ws, wa=wa,
-                  op="max")
+    last = res.groups.shape[0] - 1
+    nl = int(res.num_groups[last])
+    gs = np.array(res.groups[last, :nl])
+    for op, vals in res.values.items():
+        v = np.array(vals[last, :nl])
+        print(f"{op:15s} last window: " +
+              " ".join(f"s{g}={x:.0f}" if op == "mean" else f"s{g}={x}"
+                       for g, x in zip(gs, v)))
+
+    # anomaly check: window max far above window median flags a spike —
+    # both columns come from the same fused result
     alerts = 0
-    for w in range(med.groups.shape[0]):
-        nw = int(med.num_groups[w])
-        spikes = (np.array(mx.values[w, :nw])
-                  > np.array(med.values[w, :nw]) + 60)
+    for w in range(res.groups.shape[0]):
+        nw = int(res.num_groups[w])
+        spikes = (np.array(res.values["max"][w, :nw])
+                  > np.array(res.values["median"][w, :nw]) + 60)
         alerts += int(spikes.sum())
     print(f"windows flagged with anomaly spikes: {alerts}")
 

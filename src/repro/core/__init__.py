@@ -3,17 +3,30 @@
 Public surface:
   * combiners:  the function_select algebra (sum/min/max/count/mean/dc/...)
   * engine:     5-step group-by-aggregate over sorted streams
+                (single- and fused multi-op: ``multi_engine_step``)
   * streaming:  rolling multi-batch driver (non-blocking pipeline semantics)
   * sorter:     bitonic network (FLiMS adaptation) + lax.sort baseline
-  * swag:       sliding-window aggregation incl. median
+  * swag:       sliding-window aggregation incl. median (+ fused multi-op)
   * complexity: the paper's entity-count model
+
+The recommended entry point is the unified query-plan API
+(:mod:`repro.query`): declare a ``Query`` (ops, optional group_by, optional
+``Window(ws, wa)``, median/interpolate, streaming) and ``execute`` it — a
+planner lowers it onto a backend from :mod:`repro.kernels.registry`
+(``reference`` | ``pallas`` | ``pallas-panes`` | ``auto``, overridable via
+the ``REPRO_BACKEND`` env var).  ``Query`` / ``Window`` / ``AggResult`` /
+``plan`` / ``execute`` are re-exported here for convenience.
+
+The historical per-shape entry points (``group_by_aggregate``,
+``multi_aggregate``, ``swag``, ``swag_median`` and the kernel ``*_tpu``
+wrappers) remain as deprecated shims that construct the equivalent Query.
 """
 from repro.core.combiners import (  # noqa: F401
     ALL_OPS, PAPER_BASE_OPS, PAPER_DC_OPS, Combiner, get_combiner,
     register_combiner)
 from repro.core.engine import (  # noqa: F401
     GroupAggResult, PAD_GROUP, engine_step, group_by_aggregate,
-    multi_aggregate, rr_ports)
+    multi_aggregate, multi_engine_step, rr_ports)
 from repro.core.segscan import (  # noqa: F401
     Carry, exclusive_prefix_sum, init_carry, segment_ends, segment_starts,
     segmented_scan)
@@ -23,5 +36,17 @@ from repro.core.sorter import (  # noqa: F401
 from repro.core.streaming import StreamingAggregator, StreamResult  # noqa: F401
 from repro.core.swag import (  # noqa: F401
     frame_panes, frame_windows, num_windows, pane_compatible, swag,
-    swag_median, swag_panes)
+    swag_median, swag_multi, swag_panes)
 from repro.core import complexity  # noqa: F401
+
+_QUERY_NAMES = ("Query", "Window", "AggResult", "Plan", "plan", "execute",
+                "canonical_op")
+
+
+def __getattr__(name):
+    # lazy re-export of the query API (repro.query imports repro.core
+    # submodules; resolving these on first access keeps imports acyclic)
+    if name in _QUERY_NAMES:
+        from repro import query
+        return getattr(query, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

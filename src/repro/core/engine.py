@@ -17,6 +17,7 @@ an upstream sorter provides this; see ``core/sorter.py``).
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -42,26 +43,39 @@ def _resolve(op) -> Combiner:
     return op if isinstance(op, Combiner) else get_combiner(op)
 
 
-def engine_step(groups: Array, keys: Array, op, *,
-                carry: segscan.Carry | None = None,
-                open_tail: bool = False,
-                n_valid: Array | None = None) -> tuple[GroupAggResult, segscan.Carry]:
-    """One pass of the engine over a batch of sorted ``(group, key)`` tuples.
+def multi_engine_step(groups: Array, keys: Array, ops, *,
+                      carries=None, open_tail: bool = False,
+                      n_valid: Array | None = None):
+    """One fused engine pass evaluating several combiners over one stream.
+
+    The segment structure (entities ``t``: start/end marks, the compaction
+    permutation, the valid count) is computed **once**; each combiner adds
+    only its own lift + segmented scan + finalize + value scatter — the
+    software rendering of the paper's ``function_select``: one scan topology,
+    N concurrently-selected functional units.
 
     Args:
       groups: [N] int group ids, sorted ascending (ties contiguous).
       keys:   [N] values to aggregate.
-      op:     combiner name or :class:`Combiner`.
-      carry:  rolling state from the previous batch (streaming mode).
+      ops:    tuple of combiner names / :class:`Combiner` objects.
+      carries: optional tuple of rolling :class:`segscan.Carry` states,
+        aligned with ``ops`` (streaming mode); ``None`` entries initialise.
       open_tail: if True, the final group is *not* emitted — it may continue
         into the next batch (paper step (a): the one-batch lookahead buffer).
       n_valid: optional scalar — only the first ``n_valid`` tuples are real
         (the "dense stream" requirement; padding must sit at the tail).
 
     Returns:
-      (result, new_carry).
+      ``((out_groups, values, out_valid, num), new_carries)`` where ``values``
+      maps each combiner's name to its [N] value column (all columns share
+      ``out_groups``/``out_valid``/``num``) and ``new_carries`` is a tuple
+      aligned with ``ops``.
     """
-    combiner = _resolve(op)
+    combiners = tuple(_resolve(op) for op in ops)
+    names = [c.name for c in combiners]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate combiner names in ops: {names}")
+
     n = groups.shape[0]
     groups = groups.astype(jnp.int32)
 
@@ -71,18 +85,23 @@ def engine_step(groups: Array, keys: Array, op, *,
     else:
         in_valid = None
 
-    # (b) entities t: mark last tuple per group
+    # (b) entities t: mark last tuple per group — shared across all ops
     ends = segscan.segment_ends(groups)
     starts = segscan.segment_starts(groups)
 
-    # (c) entities n: segmented inclusive scan of the lifted keys
-    state = combiner.lift(keys)
-    scanned = segscan.segmented_scan(starts, state, combiner)
+    if carries is None:
+        carries = (None,) * len(combiners)
+    carries = tuple(
+        segscan.init_carry(c, keys.dtype) if cr is None else cr
+        for c, cr in zip(combiners, carries))
 
-    # (d) entities n': merge the rolling carry into the leading segment
-    if carry is None:
-        carry = segscan.init_carry(combiner, keys.dtype)
-    scanned = segscan.merge_carry(carry, groups, scanned, combiner)
+    # (c)+(d) entities n / n': per-op scan + rolling carry merge
+    scanneds = []
+    for combiner, carry in zip(combiners, carries):
+        state = combiner.lift(keys)
+        scanned = segscan.segmented_scan(starts, state, combiner)
+        scanned = segscan.merge_carry(carry, groups, scanned, combiner)
+        scanneds.append(scanned)
 
     emit = ends
     if in_valid is not None:
@@ -92,55 +111,103 @@ def engine_step(groups: Array, keys: Array, op, *,
         last_real = (jnp.cumsum(emit[::-1].astype(jnp.int32))[::-1] == 1) & emit
         emit = emit & ~last_real
 
-    values = combiner.finalize(scanned)
-
-    # (e) reverse butterfly: permutation index = prefix sum of valid bits
+    # (e) reverse butterfly: permutation index = prefix sum of valid bits —
+    # computed once, reused by every op's value scatter
     perm = segscan.exclusive_prefix_sum(emit)
     scatter_idx = jnp.where(emit, perm, n)  # invalid -> dropped slot
     out_groups = jnp.full((n + 1,), PAD_GROUP, jnp.int32).at[scatter_idx].set(
         groups, mode="drop")[:n]
-    out_values = jnp.zeros((n + 1,) + values.shape[1:], values.dtype).at[
-        scatter_idx].set(values, mode="drop")[:n]
     num = jnp.sum(emit.astype(jnp.int32))
     out_valid = jnp.arange(n) < num
 
-    new_carry = segscan.update_carry(carry, groups, scanned, emit, combiner)
-    if in_valid is not None:
-        # an all-padding batch must not clobber the carry group id
-        any_real = jnp.any(in_valid)
-        tail_idx = jnp.maximum(jnp.sum(in_valid.astype(jnp.int32)) - 1, 0)
-        tail_state = jax.tree.map(lambda s: s[tail_idx], scanned)
-        new_carry = segscan.Carry(
-            group=jnp.where(any_real, groups[tail_idx], carry.group).astype(jnp.int32),
-            state=jax.tree.map(
-                lambda t, c: jnp.where(any_real, t, c), tail_state,
-                jax.tree.map(jnp.asarray, carry.state)),
-            nonempty=carry.nonempty | any_real,
-            emitted=(carry.emitted + num).astype(jnp.int32),
-        )
+    values = {}
+    new_carries = []
+    for combiner, carry, scanned in zip(combiners, carries, scanneds):
+        vals = combiner.finalize(scanned)
+        values[combiner.name] = jnp.zeros(
+            (n + 1,) + vals.shape[1:], vals.dtype).at[
+            scatter_idx].set(vals, mode="drop")[:n]
 
-    return GroupAggResult(out_groups, out_values, out_valid, num), new_carry
+        new_carry = segscan.update_carry(carry, groups, scanned, emit, combiner)
+        if in_valid is not None:
+            # an all-padding batch must not clobber the carry group id
+            any_real = jnp.any(in_valid)
+            tail_idx = jnp.maximum(jnp.sum(in_valid.astype(jnp.int32)) - 1, 0)
+            tail_state = jax.tree.map(lambda s: s[tail_idx], scanned)
+            new_carry = segscan.Carry(
+                group=jnp.where(any_real, groups[tail_idx],
+                                carry.group).astype(jnp.int32),
+                state=jax.tree.map(
+                    lambda t, c: jnp.where(any_real, t, c), tail_state,
+                    jax.tree.map(jnp.asarray, carry.state)),
+                nonempty=carry.nonempty | any_real,
+                emitted=(carry.emitted + num).astype(jnp.int32),
+            )
+        new_carries.append(new_carry)
+
+    return (out_groups, values, out_valid, num), tuple(new_carries)
 
 
-def group_by_aggregate(groups: Array, keys: Array, op="sum", *,
-                       n_valid: Array | None = None) -> GroupAggResult:
-    """Single-shot group-by-aggregate over a fully-materialized sorted column.
+def engine_step(groups: Array, keys: Array, op, *,
+                carry: segscan.Carry | None = None,
+                open_tail: bool = False,
+                n_valid: Array | None = None) -> tuple[GroupAggResult, segscan.Carry]:
+    """One pass of the engine over a batch of sorted ``(group, key)`` tuples.
 
-    This is the SQL ``SELECT g, f(k) FROM t GROUP BY g ORDER BY g`` of the
-    paper's Algorithm 1 (order comes free: input is sorted, compaction is
-    stable).
+    Single-op case of :func:`multi_engine_step`; see there for argument
+    semantics.  Returns ``(result, new_carry)``.
+    """
+    combiner = _resolve(op)
+    (g, values, valid, num), (new_carry,) = multi_engine_step(
+        groups, keys, (combiner,), carries=(carry,), open_tail=open_tail,
+        n_valid=n_valid)
+    return GroupAggResult(g, values[combiner.name], valid, num), new_carry
+
+
+def _group_by_aggregate(groups: Array, keys: Array, op="sum", *,
+                        n_valid: Array | None = None) -> GroupAggResult:
+    """Internal (non-deprecated) single-shot group-by-aggregate.
+
+    The SQL ``SELECT g, f(k) FROM t GROUP BY g ORDER BY g`` of the paper's
+    Algorithm 1 (order comes free: input is sorted, compaction is stable).
+    Library code calls this; external callers use :class:`repro.query.Query`.
     """
     result, _ = engine_step(groups, keys, op, carry=None, open_tail=False,
                             n_valid=n_valid)
     return result
 
 
+def _deprecated(old: str, hint: str) -> None:
+    """One shared deprecation funnel for every legacy entry-point shim."""
+    warnings.warn(
+        f"{old} is deprecated; build a repro.query.Query ({hint}) and call "
+        f"repro.query.execute instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def group_by_aggregate(groups: Array, keys: Array, op="sum", *,
+                       n_valid: Array | None = None) -> GroupAggResult:
+    """Deprecated: use ``repro.query.Query(ops=(op,))`` + ``execute``."""
+    _deprecated("repro.core.group_by_aggregate", "Query(ops=(op,))")
+    from repro import query as _q
+    name = op.name if isinstance(op, Combiner) else _q.canonical_op(op)
+    res, _ = _q.execute(_q.Query(ops=(op,)), groups, keys, n_valid=n_valid,
+                        backend="reference")
+    return GroupAggResult(res.groups, res.values[name], res.valid,
+                          res.num_groups)
+
+
 def multi_aggregate(groups: Array, keys: Array, ops: tuple[str, ...],
                     *, n_valid: Array | None = None) -> dict[str, GroupAggResult]:
-    """Evaluate several operators in one logical pass (the hardware evaluates
-    whichever ``function_select`` says; here XLA CSEs the shared mark/compact
-    work across operators)."""
-    return {name: group_by_aggregate(groups, keys, name, n_valid=n_valid)
+    """Deprecated: use ``repro.query.Query(ops=ops)`` + ``execute`` (which
+    additionally fuses the shared mark/compact work across operators)."""
+    _deprecated("repro.core.multi_aggregate", "Query(ops=ops)")
+    from repro import query as _q
+    res, _ = _q.execute(_q.Query(ops=tuple(ops)), groups, keys,
+                        n_valid=n_valid, backend="reference")
+    return {name: GroupAggResult(res.groups,
+                                 res.values[_q.canonical_op(name)],
+                                 res.valid, res.num_groups)
             for name in ops}
 
 

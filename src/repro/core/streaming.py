@@ -4,8 +4,12 @@ The hardware engine never asserts backpressure: batches of ``P`` tuples flow
 through every cycle and a group's aggregate is emitted the moment its last
 tuple is identified (which requires the one-batch lookahead buffer, step (a)).
 
-Here a batch is an array of ``N`` tuples; :class:`StreamingAggregator` holds
-the rolling carry (the ``n'`` state) between ``push()`` calls.  Semantics:
+Here a batch is an array of ``N`` tuples; :func:`stream_push` is the
+multi-op rolling step (one fused engine pass, per-op carries — the
+``n'`` state — threaded between calls).  It is the ``path == "stream"``
+backend of the unified query API (``repro.query``);
+:class:`StreamingAggregator` is the stateful convenience wrapper built on
+top of a planned streaming :class:`repro.query.Query`.  Semantics:
 
   * a group fully contained in past batches is emitted by the push() that
     first proves it closed (i.e. sees a different leading group id);
@@ -19,7 +23,6 @@ port rotation across the whole stream.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -40,68 +43,89 @@ class StreamResult(NamedTuple):
     rr_port: Array     # [N+1] round-robin output port (-1 where invalid)
 
 
-def _push(groups: Array, keys: Array, carry: segscan.Carry, combiner: Combiner,
-          n_valid: Array | None, p_ports: int) -> tuple[StreamResult, segscan.Carry]:
-    n = groups.shape[0]
-    emitted_before = carry.emitted
+def stream_push(groups: Array, keys: Array, carries, combiners, *,
+                n_valid: Array | None = None, p_ports: int = 4):
+    """One rolling multi-op engine pass over a batch of sorted tuples.
 
-    closes_carry = carry.nonempty & (groups[0].astype(jnp.int32) != carry.group)
+    ``carries`` is a tuple of :class:`segscan.Carry`, aligned with
+    ``combiners``; every carry shares the group / nonempty / emitted fields
+    (the group structure is op-independent), so the first one drives the
+    close-carry decision.  Returns
+    ``((groups, {name: values}, valid, num, rr_port), new_carries)`` with
+    ``N + 1`` output slots.
+    """
+    combiners = tuple(c if isinstance(c, Combiner) else get_combiner(c)
+                      for c in combiners)
+    n = groups.shape[0]
+    lead = carries[0]
+    emitted_before = lead.emitted
+
+    closes_carry = lead.nonempty & (groups[0].astype(jnp.int32) != lead.group)
     if n_valid is not None:
         closes_carry = closes_carry & (n_valid > 0)
-    carried_group = carry.group
-    carried_value = combiner.finalize(jax.tree.map(jnp.asarray, carry.state))
+    carried_group = lead.group
+    carried_values = {
+        c.name: c.finalize(jax.tree.map(jnp.asarray, cr.state))
+        for c, cr in zip(combiners, carries)}
 
-    # neutralize the carry before the engine merges it if it is being closed
-    live_carry = segscan.Carry(
-        group=jnp.where(closes_carry, jnp.asarray(-1, jnp.int32), carry.group),
-        state=carry.state,
-        nonempty=carry.nonempty & ~closes_carry,
-        emitted=carry.emitted + closes_carry.astype(jnp.int32),
-    )
+    # neutralize the carries before the engine merges them if being closed
+    live_carries = tuple(
+        segscan.Carry(
+            group=jnp.where(closes_carry, jnp.asarray(-1, jnp.int32),
+                            cr.group),
+            state=cr.state,
+            nonempty=cr.nonempty & ~closes_carry,
+            emitted=cr.emitted + closes_carry.astype(jnp.int32),
+        ) for cr in carries)
 
-    result, new_carry = _engine.engine_step(
-        groups, keys, combiner, carry=live_carry, open_tail=True, n_valid=n_valid)
+    (res_g, res_values, _res_valid, res_num), new_carries = \
+        _engine.multi_engine_step(groups, keys, combiners,
+                                  carries=live_carries, open_tail=True,
+                                  n_valid=n_valid)
 
-    # prepend the carried group's slot
-    out_groups = jnp.concatenate([
-        jnp.where(closes_carry, carried_group, _engine.PAD_GROUP)[None],
-        result.groups])
-    out_values = jnp.concatenate([
-        jnp.where(closes_carry, carried_value,
-                  jnp.zeros((), carried_value.dtype))[None],
-        result.values])
-    num = result.num_groups + closes_carry.astype(jnp.int32)
-    # rotate the compacted slots so valid entries stay dense: if the carry slot
-    # is unused, shift engine results up by one
+    # prepend the carried group's slot; rotate so valid entries stay dense
+    # (if the carry slot is unused, shift engine results up by one)
+    num = res_num + closes_carry.astype(jnp.int32)
     shift = (~closes_carry).astype(jnp.int32)
     idx = jnp.arange(n + 1)
     src = jnp.clip(idx + shift, 0, n)
-    out_groups = out_groups[src]
-    out_values = out_values[src]
+
+    out_groups = jnp.concatenate([
+        jnp.where(closes_carry, carried_group, _engine.PAD_GROUP)[None],
+        res_g])[src]
+    out_values = {}
+    for c in combiners:
+        cv = carried_values[c.name]
+        col = jnp.concatenate([
+            jnp.where(closes_carry, cv, jnp.zeros((), cv.dtype))[None],
+            res_values[c.name]])
+        out_values[c.name] = col[src]
     out_valid = idx < num
 
     rr = jnp.where(out_valid, (emitted_before + idx) % p_ports, -1)
-    return StreamResult(out_groups, out_values, out_valid, num, rr), new_carry
+    return (out_groups, out_values, out_valid, num, rr), new_carries
 
 
 class StreamingAggregator:
-    """Stateful wrapper; one jit-compiled engine pass per ``push``."""
+    """Stateful wrapper over a planned streaming Query; one jit-compiled
+    fused engine pass per ``push``."""
 
     def __init__(self, op="sum", *, key_dtype=jnp.int32, p_ports: int = 4):
+        from repro import query as _q
         self.combiner = op if isinstance(op, Combiner) else get_combiner(op)
+        self.plan = _q.plan(_q.Query(ops=(self.combiner,), streaming=True),
+                            backend="reference")
         self.carry = segscan.init_carry(self.combiner, key_dtype)
         self.p_ports = p_ports
-        self._step = jax.jit(functools.partial(
-            _push, combiner=self.combiner, p_ports=p_ports),
-            static_argnames=())
+        self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports))
 
     def push(self, groups: Array, keys: Array,
              n_valid: Array | None = None) -> StreamResult:
         groups = jnp.asarray(groups, jnp.int32)
         keys = jnp.asarray(keys)
-        result, self.carry = self._step(groups, keys, carry=self.carry,
-                                        n_valid=n_valid)
-        return result
+        (g, values, valid, num, rr), (self.carry,) = self._step(
+            groups, keys, (self.carry,), n_valid)
+        return StreamResult(g, values[self.combiner.name], valid, num, rr)
 
     def flush(self) -> StreamResult:
         """Close the stream: emit the open group, reset the carry."""

@@ -29,10 +29,14 @@ from its ``P = WS/WA`` presorted panes:
     presorted runs + one engine pass with an identity-lift combiner).  The
     per-tuple work is paid once per pane instead of once per window.
 
-Dispatch rules (:func:`swag` / :func:`swag_median` with ``panes=None``):
-the pane path is taken automatically when ``WS % WA == 0``, both are powers
-of two (the merge network's wiring constraint), and ``WA < WS``; otherwise
-the original re-sort path runs.  ``panes=True``/``False`` forces either.
+Dispatch rules (``panes=None`` — spelled ``Window(panes=None)`` in the
+query API, which is the preferred entry; :func:`swag` / :func:`swag_median`
+remain as deprecated shims): the pane path is taken automatically when
+``WS % WA == 0``, both are powers of two (the merge network's wiring
+constraint), and ``WA < WS``; otherwise the original re-sort path runs.
+``panes=True``/``False`` forces either.  :func:`swag_multi` is the fused
+multi-op variant the query planner uses: one pane sort (or one per-window
+re-sort) shared by every requested combiner tail.
 
 Windows are framed with a strided gather (the "simple buffering arrangement"
 that reuses tuples when WA < WS) and processed with ``vmap`` — the software
@@ -113,10 +117,10 @@ def _pane_windows(panes: Array, nw: int, p: int) -> Array:
     return stacked.reshape((nw, p * panes.shape[1]) + panes.shape[2:])
 
 
-def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
-         presorted: bool = False, use_xla_sort: bool = False,
-         panes: bool | None = None) -> _engine.GroupAggResult:
-    """Sliding-window group-by-aggregate.
+def _swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
+          presorted: bool = False, use_xla_sort: bool = False,
+          panes: bool | None = None) -> _engine.GroupAggResult:
+    """Internal (non-deprecated) sliding-window group-by-aggregate.
 
     Returns a :class:`GroupAggResult` whose arrays carry a leading
     ``[num_windows]`` axis.  ``panes=None`` auto-dispatches to the
@@ -139,9 +143,29 @@ def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
         if not presorted:
             srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
             g, k = srt(g, k, full_width=True)
-        return _engine.group_by_aggregate(g, k, op)
+        return _engine._group_by_aggregate(g, k, op)
 
     return jax.vmap(per_window)(gw, kw)
+
+
+def swag(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
+         presorted: bool = False, use_xla_sort: bool = False,
+         panes: bool | None = None) -> _engine.GroupAggResult:
+    """Deprecated: use ``repro.query.Query(ops=(op,), window=Window(ws, wa))``
+    + ``execute``."""
+    _engine._deprecated("repro.core.swag",
+                        "Query(ops=(op,), window=Window(ws, wa))")
+    if op == "median":
+        raise ValueError("op='median' is not a combiner — use swag_median "
+                         "(or swag_panes, which returns a MedianResult)")
+    from repro import query as _q
+    name = op.name if isinstance(op, Combiner) else _q.canonical_op(op)
+    q = _q.Query(ops=(op,), window=_q.Window(ws=ws, wa=wa, panes=panes),
+                 presorted=presorted)
+    res, _ = _q.execute(q, groups, keys, backend="reference",
+                        use_xla_sort=use_xla_sort)
+    return _engine.GroupAggResult(res.groups, res.values[name], res.valid,
+                                  res.num_groups)
 
 
 def _sort_panes(groups: Array, keys: Array, *, ws: int, wa: int,
@@ -200,7 +224,7 @@ def swag_panes(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
             and not reorder_sensitive):
         return _swag_shared_partials(pg, pk, nw=nw, p=p, wa=wa, op=op)
 
-    return merged_windows(lambda g, k: _engine.group_by_aggregate(g, k, op))
+    return merged_windows(lambda g, k: _engine._group_by_aggregate(g, k, op))
 
 
 def _partial_combiner(comb: Combiner) -> Combiner:
@@ -233,7 +257,7 @@ def _swag_shared_partials(pg: Array, pk: Array, *, nw: int, p: int, wa: int,
     """
     comb = get_combiner(op)
     partial = jax.vmap(
-        lambda g, k: _engine.group_by_aggregate(g, k, op))(pg, pk)
+        lambda g, k: _engine._group_by_aggregate(g, k, op))(pg, pk)
 
     wg = _pane_windows(partial.groups, nw, p)   # [NW, P*WA]
     wv = _pane_windows(partial.values, nw, p)
@@ -244,7 +268,7 @@ def _swag_shared_partials(pg: Array, pk: Array, *, nw: int, p: int, wa: int,
 
     def per_window(g, v, nv):
         g, v = sorter.merge_presorted((g, v), run=wa, num_keys=2)
-        return _engine.group_by_aggregate(g, v, pcomb, n_valid=nv)
+        return _engine._group_by_aggregate(g, v, pcomb, n_valid=nv)
 
     return jax.vmap(per_window)(wg, wv, n_valid)
 
@@ -265,7 +289,7 @@ def _median_sorted_window(g: Array, k: Array, *, interpolate: bool
     data"): counts + group start offsets come from one engine pass and the
     middle element(s) of each group's sorted run are picked out.
     """
-    counts = _engine.group_by_aggregate(g, k, "count")
+    counts = _engine._group_by_aggregate(g, k, "count")
     n = g.shape[0]
     starts = segscan.segment_starts(g)
     seg_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
@@ -286,13 +310,14 @@ def _median_sorted_window(g: Array, k: Array, *, interpolate: bool
     return MedianResult(counts.groups, med, counts.valid, counts.num_groups)
 
 
-def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
-                interpolate: bool = False, use_xla_sort: bool = False,
-                panes: bool | None = None) -> MedianResult:
-    """Median per group per window — the paper's non-incremental example.
+def _swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
+                 interpolate: bool = False, use_xla_sort: bool = False,
+                 panes: bool | None = None) -> MedianResult:
+    """Internal (non-deprecated) median per group per window — the paper's
+    non-incremental example.
 
     Median has no incremental combiner, so the pane path (``panes=None``
-    auto-dispatch, same rules as :func:`swag`) keeps it *exact* by merging
+    auto-dispatch, same rules as :func:`_swag`) keeps it *exact* by merging
     the presorted panes into the fully sorted window before the rank pick.
     """
     if resolve_panes(ws, wa, groups.shape[-1], panes):
@@ -306,5 +331,123 @@ def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
         srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
         g, k = srt(g, k, full_width=True)
         return _median_sorted_window(g, k, interpolate=interpolate)
+
+    return jax.vmap(per_window)(gw, kw)
+
+
+def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
+                interpolate: bool = False, use_xla_sort: bool = False,
+                panes: bool | None = None) -> MedianResult:
+    """Deprecated: use ``repro.query.Query(ops=("median",),
+    window=Window(ws, wa), interpolate=...)`` + ``execute``."""
+    _engine._deprecated(
+        "repro.core.swag_median",
+        'Query(ops=("median",), window=Window(ws, wa))')
+    from repro import query as _q
+    q = _q.Query(ops=("median",), window=_q.Window(ws=ws, wa=wa, panes=panes),
+                 interpolate=interpolate)
+    res, _ = _q.execute(q, groups, keys, backend="reference",
+                        use_xla_sort=use_xla_sort)
+    return MedianResult(res.groups, res.values["median"], res.valid,
+                        res.num_groups)
+
+
+def swag_multi(groups: Array, keys: Array, *, ws: int, wa: int,
+               ops: tuple, interpolate: bool = False,
+               presorted: bool = False, use_xla_sort: bool = False,
+               panes: bool | None = None):
+    """Fused multi-op SWAG: frame + sort (or pane-merge) each window **once**,
+    then run every requested combiner tail over the same sorted sequence.
+
+    This is the query planner's reference path for ``len(ops) > 1`` — the
+    per-window sort (the dominant cost, ~log^2 WS compare-exchange sweeps) is
+    paid once instead of once per operator, and ``"median"`` may ride along
+    with incremental ops because the sort-based design hands every tail the
+    fully sorted window (the paper's argument for sort-based SWAG).
+
+    Returns ``(out_groups, values, valid, num_groups)`` with a leading
+    ``[num_windows]`` axis, where ``values`` maps op name -> value column and
+    all columns share ``out_groups``/``valid``/``num_groups``.  Element-exact
+    per op vs. the single-op paths (a fully (group, key)-sorted sequence of a
+    multiset is unique, so every path feeds identical windows to identical
+    tails; incremental ops are exact in either association for the integer /
+    min / max / count cases, and float sums take this merge path in the
+    single-op code too).
+    """
+    names = [op.name if isinstance(op, Combiner) else op for op in ops]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate ops in fused SWAG: {names}")
+
+    use_panes = resolve_panes(ws, wa, groups.shape[-1], panes,
+                              presorted=presorted)
+
+    def tails(g, k, pairs):
+        """All requested tails over one closed, sorted window — the shared
+        dispatch for both the re-sort and the pane-merge arm.  Non-median
+        ops share one fused engine pass (:func:`engine.multi_engine_step`:
+        segment marks + compaction permutation computed once)."""
+        out = {}
+        shared = None
+        non_median = tuple(op for op, name in pairs if name != "median")
+        if non_median:
+            (tg, tvalues, tvalid, tnum), _ = _engine.multi_engine_step(
+                g, k, non_median)
+            out.update(tvalues)
+            shared = (tg, tvalid, tnum)
+        if any(name == "median" for _, name in pairs):
+            t = _median_sorted_window(g, k, interpolate=interpolate)
+            out["median"] = t.medians
+            shared = shared or (t.groups, t.valid, t.num_groups)
+        return shared[0], out, shared[1], shared[2]
+
+    if use_panes:
+        pg, pk, nw, p = _sort_panes(groups, keys, ws=ws, wa=wa,
+                                    use_xla_sort=use_xla_sort)
+
+        # split ops like the single-op dispatch does: incremental ops keep
+        # their shared-partials shortcut (per-pane engine pass + group-only
+        # merge of compacted partials), everything else rides the full
+        # window merge — and *all* of them share the one pane sort above
+        reorder_sensitive = jnp.issubdtype(keys.dtype, jnp.floating)
+        partial_sel = [isinstance(op, str) and op in PARTIAL_OPS and p > 1
+                       and not (op == "sum" and reorder_sensitive)
+                       for op in ops]
+        merge_pairs = tuple((op, name) for (op, name), sel
+                            in zip(zip(ops, names), partial_sel) if not sel)
+
+        values: dict = {}
+        shared = None
+        for op, sel in zip(ops, partial_sel):
+            if sel:
+                t = _swag_shared_partials(pg, pk, nw=nw, p=p, wa=wa, op=op)
+                values[op] = t.values
+                shared = shared or (t.groups, t.valid, t.num_groups)
+
+        if merge_pairs:
+            wg = _pane_windows(pg, nw, p)
+            wk = _pane_windows(pk, nw, p)
+
+            def per_window(g, k):
+                if p > 1:
+                    g, k = sorter.merge_presorted((g, k), run=wa, num_keys=2)
+                return tails(g, k, merge_pairs)
+
+            mg, mvalues, mvalid, mnum = jax.vmap(per_window)(wg, wk)
+            values.update(mvalues)
+            # prefer the merge arm's layout metadata (identical to the
+            # partials arm: same groups per window, ascending, unique)
+            shared = (mg, mvalid, mnum)
+
+        return shared[0], values, shared[1], shared[2]
+
+    gw = frame_windows(groups, ws, wa)
+    kw = frame_windows(keys, ws, wa)
+    all_pairs = tuple(zip(ops, names))
+
+    def per_window(g, k):
+        if not presorted:
+            srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
+            g, k = srt(g, k, full_width=True)
+        return tails(g, k, all_pairs)
 
     return jax.vmap(per_window)(gw, kw)

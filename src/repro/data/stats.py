@@ -1,16 +1,18 @@
 """Per-domain streaming statistics via the aggregation engine.
 
 This is the paper's engine doing its day job *inside the training loop*: the
-trainer pushes (domain, per-sequence loss) tuples through a
-StreamingAggregator to keep running per-domain loss means / token counts —
-the group-by-aggregate query of the paper's Algorithm 1, evaluated online
-with zero hash tables.
+trainer pushes (domain, per-sequence loss) tuples through the unified query
+API to keep running per-domain loss means / token counts — the
+group-by-aggregate query of the paper's Algorithm 1, evaluated online with
+zero hash tables.  All requested ops ride **one fused engine pass** (the
+``function_select`` register serving several selections at once).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import group_by_aggregate, sort_pairs_xla
+from repro.core import sort_pairs_xla
+from repro.query import Query, canonical_op, execute
 
 
 def domain_stats(domains, values, ops=("mean", "count", "min", "max")) -> dict:
@@ -18,8 +20,6 @@ def domain_stats(domains, values, ops=("mean", "count", "min", "max")) -> dict:
     values, n)} with padded arrays (valid prefix of length n)."""
     g, v = sort_pairs_xla(jnp.asarray(domains, jnp.int32),
                           jnp.asarray(values), full_width=False)
-    out = {}
-    for op in ops:
-        r = group_by_aggregate(g, v, op)
-        out[op] = (r.groups, r.values, r.num_groups)
-    return out
+    res, _ = execute(Query(ops=tuple(ops)), g, v, backend="reference")
+    return {op: (res.groups, res.values[canonical_op(op)], res.num_groups)
+            for op in ops}

@@ -21,7 +21,6 @@ tiles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -63,6 +63,57 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig,
     return train_step, ctx
 
 
+def make_query_step(query, *, backend: str | None = None, p_ports: int = 4,
+                    mesh: jax.sharding.Mesh | None = None,
+                    data_axis: str = "data"):
+    """jit'd executor for one :class:`repro.query.Query` — the serving-step
+    factory for the aggregation engine (the analogue of ``make_decode_step``
+    for the paper's workload).
+
+    The query is planned **once** (spec validation + backend capability
+    check up front); the returned step is a compiled
+    ``(groups, keys[, state]) -> (AggResult, state)`` closure.  Streaming
+    queries thread their carry pytree through ``state`` (donated, so the
+    rolling ``n'`` buffers are updated in place).  When ``mesh`` is given,
+    inputs are annotated as batch-sharded along ``data_axis`` — one engine
+    replica per data shard, the multi-engine scale-out of the paper's
+    multi-rate design.
+
+    Returns ``(step, plan)``.
+    """
+    from repro import query as Q
+
+    plan = Q.plan(query, backend=backend)
+
+    if plan.path == "stream":
+        raw = Q.stream_fn(plan, p_ports=p_ports)
+
+        def stream_step(groups, keys, state):
+            (g, values, valid, num, _rr), new_state = raw(
+                groups, keys, state)
+            return Q.AggResult(g, values, valid, num), new_state
+
+        step = jax.jit(stream_step, donate_argnums=(2,))
+    else:
+        def batch_step(groups, keys):
+            res, _ = Q.execute(plan, groups, keys)
+            return res
+
+        step = jax.jit(batch_step)
+
+    if mesh is not None:
+        spec = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(data_axis))
+
+        def sharded(groups, keys, *rest):
+            groups = jax.device_put(groups, spec)
+            keys = jax.device_put(keys, spec)
+            return step(groups, keys, *rest)
+
+        return sharded, plan
+    return step, plan
+
+
 def make_prefill_step(cfg: ModelConfig, scheme: SH.Scheme):
     ctx = SH.MeshCtx(cfg, scheme)
 

@@ -12,5 +12,9 @@ Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd wrapper, auto interpret-mode on CPU) and ``ref.py``
 (pure-jnp oracle).  ``common.py`` holds the shared in-tile primitives
 (Hillis–Steele segscan, reverse-butterfly compaction as shift+select
-rounds, reshape-trick bitonic stages — all gather/scatter-free).
+rounds, reshape-trick bitonic stages — all gather/scatter-free) plus the
+``is_cpu``/``default_interpret`` capability probe.  ``registry.py`` is the
+backend registry the query planner (``repro.query``) dispatches through:
+``reference`` | ``pallas`` | ``pallas-panes`` | ``auto``, overridable via
+the ``REPRO_BACKEND`` env var.
 """

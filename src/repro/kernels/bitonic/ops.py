@@ -6,12 +6,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common as _common
 from repro.core import sorter as _sorter
 from repro.kernels.bitonic import kernel as _k
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=("num_keys", "interpret"))
@@ -19,8 +16,7 @@ def bitonic_sort_tpu(operands: tuple, num_keys: int = 1, *,
                      interpret: bool | None = None) -> tuple:
     """Sort parallel [R, T] (or [T]) arrays by the leading ``num_keys``
     operands, each row independently.  T must be a power of two."""
-    if interpret is None:
-        interpret = _is_cpu()
+    interpret = _common.default_interpret(interpret)
     squeeze = operands[0].ndim == 1
     if squeeze:
         operands = tuple(o[None, :] for o in operands)

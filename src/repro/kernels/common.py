@@ -26,6 +26,19 @@ from repro.core.combiners import Combiner
 Array = jax.Array
 
 
+def is_cpu() -> bool:
+    """True when the default JAX backend is CPU (no Mosaic compiler)."""
+    return jax.default_backend() == "cpu"
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the shared ``interpret`` tri-state of every kernel wrapper:
+    ``None`` auto-selects Pallas interpret mode on CPU (the validation path
+    mandated for this container) and compiled Mosaic on TPU.  This is the
+    single capability probe behind :mod:`repro.kernels.registry`."""
+    return is_cpu() if interpret is None else interpret
+
+
 def _shift_right(x: Array, d: int, fill) -> Array:
     """x[i] <- x[i-d] along the last axis (static d), front-filled."""
     pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)

@@ -1,4 +1,9 @@
-"""jit'd public wrapper for the fused group-by-aggregate kernel."""
+"""jit'd execution layer for the fused group-by-aggregate kernel.
+
+:func:`_groupagg_kernel_exec` is the internal (non-deprecated) entry the
+backend registry dispatches to; :func:`group_by_aggregate_tpu` is kept as a
+thin deprecated shim over ``repro.query.Query`` + ``execute``.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,18 +12,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.combiners import Combiner, get_combiner
-from repro.core.engine import GroupAggResult, PAD_GROUP
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+from repro.core.engine import GroupAggResult, PAD_GROUP, _deprecated
+from repro.kernels import common as _common
 
 
 @functools.partial(jax.jit, static_argnames=("op", "tile", "interpret"))
-def group_by_aggregate_tpu(groups, keys, op="sum", *, n_valid=None,
-                           tile: int = 1024,
-                           interpret: bool | None = None) -> GroupAggResult:
-    """Kernel-backed drop-in for :func:`repro.core.engine.group_by_aggregate`.
+def _groupagg_kernel_exec(groups, keys, op="sum", *, n_valid=None,
+                          tile: int = 1024,
+                          interpret: bool | None = None) -> GroupAggResult:
+    """Kernel-backed equivalent of the reference engine's single-shot pass.
 
     Contract (as in the paper): ``groups`` sorted ascending, group ids in
     ``(INT32_MIN, INT32_MAX)``; for ``distinct_count`` keys sorted within
@@ -31,9 +33,8 @@ def group_by_aggregate_tpu(groups, keys, op="sum", *, n_valid=None,
     if combiner.name in ("argmin", "argmax"):
         raise NotImplementedError(
             "position-carrying operators lift a global iota; the tiled "
-            "kernel lifts per tile — use core.group_by_aggregate")
-    if interpret is None:
-        interpret = _is_cpu()
+            "kernel lifts per tile — use the reference backend")
+    interpret = _common.default_interpret(interpret)
 
     n = groups.shape[-1]
     groups = groups.astype(jnp.int32)
@@ -53,7 +54,6 @@ def group_by_aggregate_tpu(groups, keys, op="sum", *, n_valid=None,
                                     interpret=interpret)
 
     # stitch: flat destination = tile_offset + lane, for lane < count[tile]
-    num_tiles = og.shape[0]
     offsets = jnp.cumsum(oc) - oc
     lanes = jnp.arange(tile)[None, :]
     valid = lanes < oc[:, None]
@@ -64,3 +64,18 @@ def group_by_aggregate_tpu(groups, keys, op="sum", *, n_valid=None,
         ov.reshape(-1), mode="drop")[:n]
     num = jnp.sum(oc)
     return GroupAggResult(flat_g, flat_v, jnp.arange(n) < num, num)
+
+
+def group_by_aggregate_tpu(groups, keys, op="sum", *, n_valid=None,
+                           tile: int = 1024,
+                           interpret: bool | None = None) -> GroupAggResult:
+    """Deprecated: use ``repro.query.Query(ops=(op,))`` + ``execute``
+    (``backend="pallas"``)."""
+    _deprecated("repro.kernels.groupagg.ops.group_by_aggregate_tpu",
+                "Query(ops=(op,))")
+    from repro import query as _q
+    name = op.name if isinstance(op, Combiner) else _q.canonical_op(op)
+    res, _ = _q.execute(_q.Query(ops=(op,)), groups, keys, n_valid=n_valid,
+                        backend="pallas", tile=tile, interpret=interpret)
+    return GroupAggResult(res.groups, res.values[name], res.valid,
+                          res.num_groups)

@@ -5,4 +5,4 @@ from repro.core import engine as _core
 
 
 def group_by_aggregate_ref(groups, keys, op="sum", *, n_valid=None):
-    return _core.group_by_aggregate(groups, keys, op, n_valid=n_valid)
+    return _core._group_by_aggregate(groups, keys, op, n_valid=n_valid)

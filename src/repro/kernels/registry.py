@@ -1,0 +1,160 @@
+"""Backend registry for the unified query-plan API (``repro.query``).
+
+One place answers "which implementation runs this query?" — replacing the
+per-file ``_is_cpu()`` / ``interpret`` heuristics that used to live in each
+``kernels/*/ops.py``:
+
+  * ``reference``     — pure-JAX engine/SWAG in ``repro.core`` (runs anywhere;
+                        the oracle every kernel is cross-checked against)
+  * ``pallas``        — fused Pallas kernels, each window re-sorted from
+                        scratch (group-by via the tiled groupagg kernel)
+  * ``pallas-panes``  — fused Pallas pane kernels: WA-panes sorted once,
+                        windows assembled by the bitonic merge network
+  * ``auto``          — capability-probed choice (platform + query shape)
+
+Selection precedence: explicit ``backend=`` argument > the ``REPRO_BACKEND``
+environment variable > ``auto``.  The capability probe
+(:func:`repro.kernels.common.default_interpret`) picks Pallas interpret mode
+on CPU and compiled Mosaic on TPU; ``auto`` keeps reference on CPU (interpret
+mode is a validation tool, not a fast path) and prefers the pane kernels on
+TPU whenever the window shape allows.
+
+New backends register with :func:`register_backend` — the software analogue
+of the paper's "adaptable engine" axis: the :class:`repro.query.Query` spec
+stays fixed while engines come and go underneath it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+from repro.core.swag import pane_compatible
+from repro.kernels import common
+
+#: environment variable consulted when no explicit backend is passed
+BACKEND_ENV = "REPRO_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One engine implementation the planner can lower a Query onto.
+
+    ``supports(query) -> str | None`` returns a human-readable reason when
+    the backend cannot run the query (None = supported).  The runner
+    callables are bound lazily (import cost + cycle avoidance) by
+    ``repro.query``; the registry only answers capability questions.
+    """
+    name: str
+    supports: Callable[[object], str | None]
+    #: kernels run in interpret mode on CPU (capability probe)
+    uses_kernels: bool = False
+
+
+def _ref_supports(q) -> str | None:
+    return None  # the reference path is total — it is the oracle
+
+
+def _pallas_window_common(q) -> str | None:
+    """Window-clause checks shared by both kernel backends."""
+    if q.window.ws & (q.window.ws - 1):
+        return f"pallas window kernels need power-of-two WS, got {q.window.ws}"
+    if q.presorted:
+        return "pallas window kernels always sort in VMEM"
+    if q.interpolate:
+        return "pallas median is lower-median only (interpolate=False)"
+    return None
+
+
+def _pallas_supports(q) -> str | None:
+    if q.streaming:
+        return "streaming carries are a reference-backend feature"
+    if q.window is not None:
+        common = _pallas_window_common(q)
+        if common is not None:
+            return common
+        if q.window.panes is True and q.window.wa < q.window.ws:
+            # never a silent fallback: an explicit pane force belongs to
+            # pallas-panes (wa == ws is exempt — there the pane path *is*
+            # the per-window re-sort)
+            return ("Window(panes=True) forces the pane path — use the "
+                    "pallas-panes backend")
+    else:
+        if any(op in ("argmin", "argmax") for op in q.ops):
+            return ("position-carrying operators lift a global iota; the "
+                    "tiled kernel lifts per tile")
+        if "median" in q.ops:
+            return "non-windowed median needs the reference sort pipeline"
+    return None
+
+
+def _pallas_panes_supports(q) -> str | None:
+    if q.window is None:
+        return "pane kernels are a windowed-query backend"
+    if q.streaming:
+        return "streaming carries are a reference-backend feature"
+    common = _pallas_window_common(q)
+    if common is not None:
+        return common
+    ws, wa = q.window.ws, q.window.wa
+    if not (pane_compatible(ws, wa) or (ws == wa and ws & (ws - 1) == 0)):
+        return (f"pane path needs power-of-two WS/WA with WA dividing WS, "
+                f"got ws={ws} wa={wa}")
+    if q.window.panes is False:
+        return "Window(panes=False) forces the re-sort path"
+    return None
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> None:
+    """Extension point: plug a new engine under the fixed Query spec."""
+    _BACKENDS[backend.name] = backend
+
+
+register_backend(Backend("reference", _ref_supports))
+register_backend(Backend("pallas", _pallas_supports, uses_kernels=True))
+register_backend(Backend("pallas-panes", _pallas_panes_supports,
+                         uses_kernels=True))
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_BACKENDS) + ("auto",)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; have {sorted(available_backends())}"
+        ) from None
+
+
+def resolve_backend(explicit: str | None = None) -> str:
+    """Apply the selection precedence; returns a backend name (may be
+    ``"auto"``, which :func:`choose_backend` then resolves per query)."""
+    name = explicit if explicit is not None else \
+        os.environ.get(BACKEND_ENV) or "auto"
+    if name != "auto":
+        get_backend(name)  # validate early
+    return name
+
+
+def choose_backend(query) -> str:
+    """Resolve ``auto`` for one query via the capability probe.
+
+    On CPU every kernel would run in Pallas interpret mode — a correctness
+    tool, orders of magnitude slower than the reference path — so ``auto``
+    stays on ``reference``.  On an accelerator the fused kernels win:
+    pane kernels when the window shape allows sharing sorted panes, the
+    re-sort kernel otherwise, the tiled groupagg kernel for non-windowed
+    queries.
+    """
+    if common.is_cpu():
+        return "reference"
+    for name in ("pallas-panes", "pallas"):
+        if get_backend(name).supports(query) is None:
+            return name
+    return "reference"

@@ -6,12 +6,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common as _common
 from repro.core.combiners import Combiner, get_combiner
 from repro.kernels.segscan import kernel as _k
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=("op", "tile", "interpret"))
@@ -25,8 +22,7 @@ def segmented_scan_tpu(flags, state, op="sum", *, tile: int = 1024,
     on TPU.
     """
     combiner = op if isinstance(op, Combiner) else get_combiner(op)
-    if interpret is None:
-        interpret = _is_cpu()
+    interpret = _common.default_interpret(interpret)
 
     leaves = jax.tree.leaves(state)
     treedef = jax.tree.structure(state)

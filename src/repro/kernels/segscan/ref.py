@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the segscan kernel: log-depth associative scan."""
 from __future__ import annotations
 
-import jax
 
 from repro.core import segscan as _core
 from repro.core.combiners import Combiner, get_combiner

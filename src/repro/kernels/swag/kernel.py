@@ -35,23 +35,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.combiners import Combiner, get_combiner
+from repro.core.combiners import get_combiner
 from repro.core.engine import PAD_GROUP
 from repro.kernels import common
-
-
-def _engine_in_tile(g, k, combiner: Combiner):
-    """Non-rolling 5-step engine over one closed, sorted window."""
-    sentinel = jnp.iinfo(jnp.int32).min
-    starts = g != common._shift_right(g, 1, sentinel)
-    ends = g != common._shift_left(g, 1, sentinel)  # window is closed: last lane ends
-    state = combiner.lift(k)
-    scanned = common.tile_segmented_scan(starts, state, combiner)
-    values = combiner.finalize(scanned)
-    emit = ends & (g != PAD_GROUP)
-    (cg, cv), cnt = common.butterfly_compact(
-        emit, (g, values), (PAD_GROUP, jnp.zeros((), values.dtype)))
-    return cg, cv, cnt
 
 
 def _median_in_tile(g, k):
@@ -79,17 +65,57 @@ def _median_in_tile(g, k):
     return cg, cv, cnt
 
 
-def _kernel(g_ref, k_ref, og_ref, ov_ref, oc_ref, *, combiner, median: bool):
+def _multi_tails_in_tile(g, k, combiners: dict):
+    """All requested combiner tails over one closed, sorted window.
+
+    ``combiners`` maps op name -> :class:`Combiner` (``"median"`` -> None).
+    The segment structure is computed once; every non-median op shares one
+    reverse-butterfly compaction pass (``butterfly_compact`` routes the group
+    column and all value columns through the same displacement network —
+    the hardware's PRRA serving N ``function_select`` units at once).
+    Returns ``(cg, {name: cv}, cnt)``.
+    """
+    sentinel = jnp.iinfo(jnp.int32).min
+    starts = g != common._shift_right(g, 1, sentinel)
+    ends = g != common._shift_left(g, 1, sentinel)
+
+    vals, fills, names = [], [], []
+    for name, comb in combiners.items():
+        if comb is None:  # median: separate emit mask, handled below
+            continue
+        state = comb.lift(k)
+        scanned = common.tile_segmented_scan(starts, state, comb)
+        vals.append(comb.finalize(scanned))
+        fills.append(jnp.zeros((), vals[-1].dtype))
+        names.append(name)
+
+    out = {}
+    cg = cnt = None
+    if names:
+        emit = ends & (g != PAD_GROUP)
+        compacted, cnt = common.butterfly_compact(
+            emit, (g, *vals), (PAD_GROUP, *fills))
+        cg = compacted[0]
+        out.update(zip(names, compacted[1:]))
+    if None in combiners.values():
+        mg, mv, mcnt = _median_in_tile(g, k)
+        med_name = next(n for n, c in combiners.items() if c is None)
+        out[med_name] = mv
+        if cg is None:
+            cg, cnt = mg, mcnt
+    return cg, out, cnt
+
+
+def _kernel(g_ref, k_ref, *out_refs, combiners: dict):
     g = g_ref[0, :]
     k = k_ref[0, :]
     # (window buffer has already framed WS/WA; sort = the paper's small sorter)
     g, k = common.bitonic_sort_tile((g, k), num_keys=2)
-    if median:
-        cg, cv, cnt = _median_in_tile(g, k)
-    else:
-        cg, cv, cnt = _engine_in_tile(g, k, combiner)
+    cg, vals, cnt = _multi_tails_in_tile(g, k, combiners)
+    og_ref, *ov_refs, oc_ref = out_refs
     og_ref[0, :] = cg
-    ov_ref[0, :] = cv
+    for name, ov_ref in zip(combiners, ov_refs):
+        ov_ref[0, :] = vals[name]
     oc_ref[0, 0] = cnt[0]
 
 
@@ -125,77 +151,81 @@ def sort_panes_pallas(panes_g, panes_k, *, interpret: bool):
     )(panes_g, panes_k)
 
 
-def _pane_kernel(*refs, p: int, wa: int, combiner, median: bool):
+def _pane_kernel(*refs, p: int, wa: int, combiners: dict):
     g_refs, k_refs = refs[:p], refs[p:2 * p]
-    og_ref, ov_ref, oc_ref = refs[2 * p:]
+    og_ref, *ov_refs, oc_ref = refs[2 * p:]
     g = jnp.concatenate([r[0, :] for r in g_refs], axis=-1)
     k = jnp.concatenate([r[0, :] for r in k_refs], axis=-1)
     # panes are presorted: merge network instead of a re-sort
     g, k = common.bitonic_merge_tile((g, k), num_keys=2, run=wa)
-    if median:
-        cg, cv, cnt = _median_in_tile(g, k)
-    else:
-        cg, cv, cnt = _engine_in_tile(g, k, combiner)
+    cg, vals, cnt = _multi_tails_in_tile(g, k, combiners)
     og_ref[0, :] = cg
-    ov_ref[0, :] = cv
+    for name, ov_ref in zip(combiners, ov_refs):
+        ov_ref[0, :] = vals[name]
     oc_ref[0, 0] = cnt[0]
 
 
-def swag_pallas_panes(panes_g, panes_k, op: str, *, p: int, interpret: bool):
-    """Window pass over presorted panes.
+def _resolve_ops(ops) -> dict:
+    """op name(s) -> {name: Combiner | None}; ``None`` marks median."""
+    if isinstance(ops, str):
+        ops = (ops,)
+    return {op: (None if op == "median" else get_combiner(op)) for op in ops}
+
+
+def swag_pallas_panes(panes_g, panes_k, ops, *, p: int, interpret: bool):
+    """Window pass over presorted panes — one merge, N combiner tails.
 
     ``panes_*``: [NP, WA] sorted panes (from :func:`sort_panes_pallas`);
     window ``i`` merges pane rows ``i .. i+p-1`` — expressed as ``p``
     overlapping BlockSpecs over the same operand, one per pane offset.
+    ``ops`` is one op name or a tuple of names (the fused multi-op path:
+    the pane framing, the merge network and the compaction run once; each
+    extra op adds only its scan + one value column).  Returns
+    ``(og, {name: ov}, oc)``.
     """
     np_, wa = panes_g.shape
     nw = np_ - p + 1
     ws = p * wa
-    median = op == "median"
-    combiner = None if median else get_combiner(op)
-    out_dtype = _out_dtype(op, panes_k.dtype)
+    combiners = _resolve_ops(ops)
 
-    kern = functools.partial(_pane_kernel, p=p, wa=wa, combiner=combiner,
-                             median=median)
+    kern = functools.partial(_pane_kernel, p=p, wa=wa, combiners=combiners)
     pane_specs = [pl.BlockSpec((1, wa), lambda i, off=off: (i + off, 0))
                   for off in range(p)]
     out_block = pl.BlockSpec((1, ws), lambda i: (i, 0))
     cnt_block = pl.BlockSpec((1, 1), lambda i: (i, 0))
-    og, ov, oc = pl.pallas_call(
+    og, *ovs, oc = pl.pallas_call(
         kern,
         grid=(nw,),
         in_specs=pane_specs + pane_specs,
-        out_specs=[out_block, out_block, cnt_block],
-        out_shape=[
-            jax.ShapeDtypeStruct((nw, ws), jnp.int32),
-            jax.ShapeDtypeStruct((nw, ws), out_dtype),
-            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
-        ],
+        out_specs=[out_block] + [out_block] * len(combiners) + [cnt_block],
+        out_shape=[jax.ShapeDtypeStruct((nw, ws), jnp.int32)]
+        + [jax.ShapeDtypeStruct((nw, ws), _out_dtype(name, panes_k.dtype))
+           for name in combiners]
+        + [jax.ShapeDtypeStruct((nw, 1), jnp.int32)],
         interpret=interpret,
     )(*([panes_g] * p + [panes_k] * p))
-    return og, ov, oc[:, 0]
+    return og, dict(zip(combiners, ovs)), oc[:, 0]
 
 
-def swag_pallas(frames_g, frames_k, op: str, *, interpret: bool):
-    """frames_*: [NW, WS] framed windows, WS a power of two."""
+def swag_pallas(frames_g, frames_k, ops, *, interpret: bool):
+    """frames_*: [NW, WS] framed windows, WS a power of two.  ``ops`` is one
+    op name or a tuple (fused multi-op: one sort, N tails).  Returns
+    ``(og, {name: ov}, oc)``."""
     nw, ws = frames_g.shape
-    median = op == "median"
-    combiner = None if median else get_combiner(op)
-    out_dtype = _out_dtype(op, frames_k.dtype)
+    combiners = _resolve_ops(ops)
 
-    kern = functools.partial(_kernel, combiner=combiner, median=median)
+    kern = functools.partial(_kernel, combiners=combiners)
     block = pl.BlockSpec((1, ws), lambda i: (i, 0))
     cnt_block = pl.BlockSpec((1, 1), lambda i: (i, 0))
-    og, ov, oc = pl.pallas_call(
+    og, *ovs, oc = pl.pallas_call(
         kern,
         grid=(nw,),
         in_specs=[block, block],
-        out_specs=[block, block, cnt_block],
-        out_shape=[
-            jax.ShapeDtypeStruct((nw, ws), jnp.int32),
-            jax.ShapeDtypeStruct((nw, ws), out_dtype),
-            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
-        ],
+        out_specs=[block] + [block] * len(combiners) + [cnt_block],
+        out_shape=[jax.ShapeDtypeStruct((nw, ws), jnp.int32)]
+        + [jax.ShapeDtypeStruct((nw, ws), _out_dtype(name, frames_k.dtype))
+           for name in combiners]
+        + [jax.ShapeDtypeStruct((nw, 1), jnp.int32)],
         interpret=interpret,
     )(frames_g, frames_k)
-    return og, ov, oc[:, 0]
+    return og, dict(zip(combiners, ovs)), oc[:, 0]

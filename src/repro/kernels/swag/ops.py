@@ -1,4 +1,8 @@
-"""jit'd public wrapper for the fused SWAG kernels.
+"""jit'd execution layer for the fused SWAG kernels.
+
+:func:`_swag_kernel_exec` is the internal (non-deprecated) entry the backend
+registry dispatches to — it accepts one op or a tuple of ops and runs the
+fused multi-op kernels (pane framing / sorting once, N combiner tails).
 
 Dispatch (``panes=None``): when ``WS % WA == 0``, both powers of two and
 ``WA < WS``, the pane pair runs — panes sorted once in a prologue
@@ -8,6 +12,9 @@ sort across the P windows sharing each pane.  Otherwise each window is
 re-sorted from scratch.  Results are element-exact either way: a fully
 (group, key)-sorted window is unique, so both paths feed the identical
 sequence to the identical engine tail.
+
+:func:`swag_tpu` is kept as a thin deprecated shim over
+``repro.query.Query`` + ``execute``.
 """
 from __future__ import annotations
 
@@ -17,9 +24,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import PAD_GROUP
+from repro.core.engine import PAD_GROUP, _deprecated
 from repro.core.swag import frame_panes, frame_windows, num_windows, \
     resolve_panes
+from repro.kernels import common as _common
 
 
 class SwagResult(NamedTuple):
@@ -29,29 +37,33 @@ class SwagResult(NamedTuple):
     num_groups: jax.Array  # [NW]
 
 
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
 @functools.partial(jax.jit,
-                   static_argnames=("ws", "wa", "op", "interpret", "panes"))
-def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
-             interpret: bool | None = None,
-             panes: bool | None = None) -> SwagResult:
-    """Sliding-window aggregate: last ``ws`` tuples per group, advance ``wa``.
+                   static_argnames=("ws", "wa", "ops", "interpret", "panes"))
+def _swag_kernel_exec(groups, keys, *, ws: int, wa: int, ops,
+                      interpret: bool | None = None,
+                      panes: bool | None = None):
+    """Fused Pallas SWAG over one or many ops.
 
-    ``op`` may be any registered combiner name or ``"median"`` (the paper's
-    non-incremental showcase).  WS must be a power of two (pad otherwise).
-    ``panes`` forces (True) or suppresses (False) the sort-once pane path;
-    ``None`` auto-dispatches (see module docstring).
+    ``ops``: one combiner name or a tuple of names (``"median"`` allowed).
+    WS must be a power of two (pad otherwise).  ``panes`` forces (True) or
+    suppresses (False) the sort-once pane path; ``None`` auto-dispatches.
+    Returns ``(og [NW, WS], {name: ov}, valid [NW, WS], oc [NW])``.
     """
-    if interpret is None:
-        interpret = _is_cpu()
+    interpret = _common.default_interpret(interpret)
     if ws & (ws - 1):
         raise ValueError(f"WS must be a power of two, got {ws}")
     from repro.kernels.swag import kernel as _k
 
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
     nw = num_windows(groups.shape[-1], ws, wa)
+    if nw == 0:
+        # stream shorter than one window: agree with the reference backend
+        # (an empty [0, WS] result) instead of handing pallas_call a
+        # zero-length grid
+        return (jnp.full((0, ws), PAD_GROUP, jnp.int32),
+                {name: jnp.zeros((0, ws), _k._out_dtype(name, keys.dtype))
+                 for name in names},
+                jnp.zeros((0, ws), bool), jnp.zeros((0,), jnp.int32))
     panes = resolve_panes(ws, wa, groups.shape[-1], panes)
 
     # wa == ws means one pane per window: the "merge" degenerates to the
@@ -62,12 +74,29 @@ def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
         pg = frame_panes(groups.astype(jnp.int32), wa, np_)
         pk = frame_panes(keys, wa, np_)
         pg, pk = _k.sort_panes_pallas(pg, pk, interpret=interpret)
-        og, ov, oc = _k.swag_pallas_panes(pg, pk, op, p=p,
-                                          interpret=interpret)
+        og, ovs, oc = _k.swag_pallas_panes(pg, pk, ops, p=p,
+                                           interpret=interpret)
     else:
         fg = frame_windows(groups.astype(jnp.int32), ws, wa)
         fk = frame_windows(keys, ws, wa)
-        og, ov, oc = _k.swag_pallas(fg, fk, op, interpret=interpret)
+        og, ovs, oc = _k.swag_pallas(fg, fk, ops, interpret=interpret)
     valid = jnp.arange(ws)[None, :] < oc[:, None]
     og = jnp.where(valid, og, PAD_GROUP)
-    return SwagResult(og, ov, valid, oc)
+    return og, ovs, valid, oc
+
+
+def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
+             interpret: bool | None = None,
+             panes: bool | None = None) -> SwagResult:
+    """Deprecated: use ``repro.query.Query(ops=(op,), window=Window(ws, wa))``
+    + ``execute`` (``backend="pallas"``/``"pallas-panes"``/``"auto"``)."""
+    _deprecated("repro.kernels.swag.ops.swag_tpu",
+                "Query(ops=(op,), window=Window(ws, wa))")
+    from repro import query as _q
+    name = _q.canonical_op(op)
+    backend = ("pallas-panes"
+               if resolve_panes(ws, wa, groups.shape[-1], panes) and wa < ws
+               else "pallas")
+    q = _q.Query(ops=(op,), window=_q.Window(ws=ws, wa=wa, panes=panes))
+    res, _ = _q.execute(q, groups, keys, backend=backend, interpret=interpret)
+    return SwagResult(res.groups, res.values[name], res.valid, res.num_groups)

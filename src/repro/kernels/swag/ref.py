@@ -1,13 +1,14 @@
-"""Pure-jnp oracle for the SWAG kernels: core swag / swag_median.
+"""Pure-jnp oracle for the SWAG kernels: the reference-backend swag paths.
 
 ``panes=False`` is forced so the oracle stays the independent re-sort path
 (``lax.sort`` per window + engine) even for pane-compatible (WS, WA) — the
-kernels' pane variant must match it element-exactly.
+kernels' pane variant must match it element-exactly.  Uses the internal
+(non-deprecated) reference implementations directly: the oracle must stay
+independent of the query planner it validates.
 """
 from __future__ import annotations
 
-from repro.core.swag import swag as _swag
-from repro.core.swag import swag_median as _swag_median
+from repro.core.swag import _swag, _swag_median
 
 
 def swag_ref(groups, keys, *, ws: int, wa: int, op="sum"):

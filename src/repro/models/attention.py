@@ -17,7 +17,6 @@ O(T·W) — this is what lets mixtral take the long_500k shape.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -18,9 +18,8 @@ Layer types:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from repro.core import segscan
 from repro.core.combiners import get_combiner
 from repro.models import params as P
-from repro.models.mlp import init_mlp, mlp
 
 Array = jax.Array
 

@@ -1,0 +1,364 @@
+"""The unified query-plan API: one declarative ``Query`` spec, a planner,
+and a backend registry — the paper's *adaptability* claim as a library
+surface.
+
+The hardware engine is one topology whose behaviour a memory-mapped
+``function_select`` register redirects at runtime; this module is the
+software analogue.  Instead of picking among scattered entry points
+(``group_by_aggregate`` / ``multi_aggregate`` / ``swag`` / ``swag_median`` /
+``*_tpu`` wrappers — all still available as deprecated shims), callers
+declare *what* they want:
+
+    >>> from repro.query import Query, Window, execute
+    >>> q = Query(ops=("sum", "min", "dc"), window=Window(ws=1024, wa=256))
+    >>> result, _ = execute(q, groups, keys)
+    >>> result.values["sum"].shape      # [num_windows, 1024]
+
+and the planner lowers it onto a backend from
+:mod:`repro.kernels.registry` (``reference`` | ``pallas`` |
+``pallas-panes`` | ``auto``; overridable per call or via the
+``REPRO_BACKEND`` environment variable).
+
+Multi-op queries are **fused**: the sort / pane framing / segment marking /
+compaction permutation run once and every requested combiner rides the same
+sorted stream — the ``function_select`` register serving N selections at
+once.  The single :class:`AggResult` type replaces the per-entry-point
+result tuples; all value columns share one ``groups``/``valid`` layout.
+
+Contracts (unchanged from the paper): non-windowed queries require the
+input sorted by group id (ties contiguous; an upstream sorter provides
+this); ``distinct_count`` additionally requires keys sorted within groups —
+windowed queries sort internally, so both hold for free there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import streaming as _streaming
+from repro.core.swag import _swag, _swag_median, swag_multi
+from repro.core.combiners import Combiner, get_combiner
+from repro.kernels import registry as _registry
+
+Array = jax.Array
+
+#: spelling conveniences accepted anywhere an op name is (the paper calls
+#: distinct count "dc" throughout)
+OP_ALIASES = {
+    "dc": "distinct_count",
+    "avg": "mean",
+    "average": "mean",
+    "med": "median",
+}
+
+
+def canonical_op(name: str) -> str:
+    """Resolve an op-name alias (``"dc"`` -> ``"distinct_count"``, ...)."""
+    return OP_ALIASES.get(name, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """Sliding-window clause: aggregate the last ``ws`` tuples, advance by
+    ``wa`` (time = tuple count, the paper's primary case).
+
+    ``wa=None`` means tumbling (``wa = ws``).  ``panes`` is the tri-state
+    pane-path control honoured by the reference backend (``None``
+    auto-dispatches to sort-once panes when the shape allows, ``True``
+    forces / ``False`` suppresses); the kernel backends encode the choice in
+    the backend name (``pallas`` re-sorts, ``pallas-panes`` shares panes).
+
+    ``ws_per_group`` is reserved for the paper's per-group-window
+    approximation (ROADMAP): a mapping of group id -> window size served
+    from the shared pane store.  Specifying it raises until that lands.
+    """
+    ws: int
+    wa: int | None = None
+    panes: bool | None = None
+    ws_per_group: Any = None
+
+    def __post_init__(self):
+        if self.ws <= 0:
+            raise ValueError(f"ws must be positive, got {self.ws}")
+        wa = self.ws if self.wa is None else self.wa
+        if wa <= 0:
+            raise ValueError(f"wa must be positive, got {wa}")
+        object.__setattr__(self, "wa", wa)
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """Declarative aggregation query — the ``function_select`` spec.
+
+    Fields:
+      ops: one combiner name / :class:`Combiner`, or a tuple of them; the
+        non-incremental ``"median"`` is a valid op (windowed queries only).
+        Aliases from :data:`OP_ALIASES` are normalised (``"dc"`` ->
+        ``"distinct_count"``).
+      group_by: when False the whole stream is one group (``groups`` may be
+        omitted at execute time) — ``SELECT f(k) FROM t`` without the
+        ``GROUP BY``.
+      window: optional :class:`Window` clause (SWAG).
+      interpolate: median only — return the float midpoint of the two
+        middle elements instead of the lower median.
+      n_valid: optional static prefix length — only the first ``n_valid``
+        tuples are real (padding at the tail).  An array can also be passed
+        to :func:`execute` for traced prefixes.
+      streaming: thread a rolling carry across :func:`execute` calls
+        (multi-batch mode; the paper's non-blocking pipeline).
+      presorted: windowed queries only — promise each framed window is
+        already (group, key)-sorted, skipping the per-window sorter.
+    """
+    ops: Any
+    group_by: bool = True
+    window: Window | None = None
+    interpolate: bool = False
+    n_valid: int | None = None
+    streaming: bool = False
+    presorted: bool = False
+
+    def __post_init__(self):
+        ops = self.ops
+        if isinstance(ops, (str, Combiner)):
+            ops = (ops,)
+        ops = tuple(canonical_op(op) if isinstance(op, str) else op
+                    for op in ops)
+        if not ops:
+            raise ValueError("Query needs at least one op")
+        names = [op.name if isinstance(op, Combiner) else op for op in ops]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate ops in query: {names}")
+        object.__setattr__(self, "ops", ops)
+
+    @property
+    def op_names(self) -> tuple[str, ...]:
+        return tuple(op.name if isinstance(op, Combiner) else op
+                     for op in self.ops)
+
+
+class AggResult(NamedTuple):
+    """The single result type every backend returns.
+
+    ``values`` maps op name -> value column; all columns share ``groups`` /
+    ``valid`` / ``num_groups``.  Windowed queries carry a leading
+    ``[num_windows]`` axis on every array; streaming queries return the
+    batch layout of the paper's non-blocking pipeline (``N + 1`` slots, the
+    +1 holding a group closed exactly at the batch boundary).
+    """
+    groups: Array           # [N] int32 — compacted group ids (padded tail)
+    values: dict            # {op name: [N] aggregate column}
+    valid: Array            # [N] bool — which slots hold a real group
+    num_groups: Array       # scalar int32 (per window when windowed)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A Query lowered onto a concrete backend.
+
+    Hashable and reusable: build once (validating spec + backend capability
+    up front), execute many times — :func:`execute` accepts either a
+    ``Query`` (planned on the fly) or a prebuilt ``Plan``.
+    """
+    query: Query
+    backend: str            # concrete registry name (never "auto")
+    path: str               # "engine" | "window" | "stream"
+    note: str = ""
+
+
+def plan(query: Query, *, backend: str | None = None) -> Plan:
+    """Validate ``query`` and choose a backend.
+
+    Precedence: ``backend`` argument > ``REPRO_BACKEND`` env var > ``auto``
+    (capability probe: reference on CPU, fused kernels on accelerators).
+    Raises ``ValueError`` when an explicitly requested backend cannot run
+    the query (never a silent fallback).
+    """
+    if not isinstance(query, Query):
+        raise TypeError(f"expected a Query, got {type(query).__name__}")
+    if query.window is not None and query.window.ws_per_group is not None:
+        raise NotImplementedError(
+            "Window(ws_per_group=...) is the spec slot for the paper's "
+            "per-group-window approximation — see ROADMAP.md (per-group "
+            "pane index over the shared pane store); not implemented yet")
+    if query.streaming and query.window is not None:
+        raise NotImplementedError(
+            "streaming windowed queries need the per-group pane store "
+            "(ROADMAP); run windowed queries batch-at-a-time for now")
+    names = query.op_names
+    if "median" in names and query.window is None:
+        raise NotImplementedError(
+            "median is windowed-only (the sort-based SWAG pipeline "
+            "provides the group cardinalities it needs)")
+    if query.interpolate and "median" not in names:
+        raise ValueError("interpolate=True applies to the median op only")
+    if query.n_valid is not None and query.window is not None:
+        raise ValueError("n_valid applies to non-windowed queries (windows "
+                         "frame a dense stream)")
+    for op in query.ops:
+        if isinstance(op, str) and op != "median":
+            get_combiner(op)  # raises on unknown names
+
+    name = _registry.resolve_backend(backend)
+    note = ""
+    if name == "auto":
+        name = _registry.choose_backend(query)
+        note = "auto"
+    reason = _registry.get_backend(name).supports(query)
+    if reason is not None:
+        raise ValueError(f"backend {name!r} cannot run this query: {reason}")
+
+    path = ("stream" if query.streaming
+            else "window" if query.window is not None
+            else "engine")
+    return Plan(query=query, backend=name, path=path, note=note)
+
+
+def _combiners(query: Query) -> tuple[Combiner | None, ...]:
+    """Resolved combiners aligned with ``query.ops`` (None marks median)."""
+    return tuple(None if (isinstance(op, str) and op == "median")
+                 else (op if isinstance(op, Combiner) else get_combiner(op))
+                 for op in query.ops)
+
+
+def _prepare_inputs(query: Query, groups, keys, n_valid):
+    if keys is None:
+        raise ValueError("keys are required")
+    keys = jnp.asarray(keys)
+    if query.group_by:
+        if groups is None:
+            raise ValueError("Query(group_by=True) needs a groups column")
+        groups = jnp.asarray(groups)
+    else:
+        # the whole stream is one group — SELECT f(k) FROM t
+        groups = jnp.zeros(keys.shape[-1:], jnp.int32)
+    if n_valid is None:
+        n_valid = query.n_valid
+    return groups, keys, n_valid
+
+
+def stream_fn(p: Plan, *, p_ports: int = 4):
+    """Return the raw streaming step of a planned streaming query:
+    ``(groups, keys, carries, n_valid) -> ((groups, values, valid, num, rr),
+    carries)`` — jit-friendly (close over the static plan)."""
+    if p.path != "stream":
+        raise ValueError("stream_fn needs a streaming plan")
+    combiners = _combiners(p.query)
+
+    def step(groups, keys, carries, n_valid=None):
+        return _streaming.stream_push(groups, keys, carries, combiners,
+                                      n_valid=n_valid, p_ports=p_ports)
+
+    return step
+
+
+def init_stream_state(p: Plan, key_dtype=jnp.int32):
+    """Fresh per-op carries for a streaming plan."""
+    from repro.core import segscan
+    return tuple(segscan.init_carry(c, key_dtype)
+                 for c in _combiners(p.query))
+
+
+def _execute_engine(p: Plan, groups, keys, n_valid, *, tile, interpret):
+    q = p.query
+    if p.backend == "pallas":
+        from repro.kernels.groupagg.ops import _groupagg_kernel_exec
+        values = {}
+        shared = None
+        # the tiled groupagg kernel is single-op (per-tile carry stitching);
+        # multi-op fusion is the reference path's job — see swag for the
+        # windowed fused kernels
+        for op, name in zip(q.ops, q.op_names):
+            r = _groupagg_kernel_exec(groups, keys, op, n_valid=n_valid,
+                                      tile=tile, interpret=interpret)
+            values[name] = r.values
+            shared = shared or (r.groups, r.valid, r.num_groups)
+        return AggResult(shared[0], values, shared[1], shared[2])
+    (g, values, valid, num), _ = _engine.multi_engine_step(
+        groups, keys, q.ops, n_valid=n_valid)
+    return AggResult(g, values, valid, num)
+
+
+def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
+    q = p.query
+    w = q.window
+    if p.backend in ("pallas", "pallas-panes"):
+        from repro.kernels.swag.ops import _swag_kernel_exec
+        panes = True if p.backend == "pallas-panes" else False
+        og, ovs, valid, oc = _swag_kernel_exec(
+            groups, keys, ws=w.ws, wa=w.wa, ops=q.op_names,
+            interpret=interpret, panes=panes)
+        return AggResult(og, ovs, valid, oc)
+
+    if len(q.ops) > 1:
+        g, values, valid, num = swag_multi(
+            groups, keys, ws=w.ws, wa=w.wa, ops=q.ops,
+            interpolate=q.interpolate, presorted=q.presorted,
+            use_xla_sort=use_xla_sort, panes=w.panes)
+        return AggResult(g, values, valid, num)
+
+    (op,) = q.ops
+    name, = q.op_names
+    if name == "median":
+        r = _swag_median(groups, keys, ws=w.ws, wa=w.wa,
+                         interpolate=q.interpolate,
+                         use_xla_sort=use_xla_sort, panes=w.panes)
+        return AggResult(r.groups, {name: r.medians}, r.valid, r.num_groups)
+    r = _swag(groups, keys, ws=w.ws, wa=w.wa, op=op,
+              presorted=q.presorted, use_xla_sort=use_xla_sort,
+              panes=w.panes)
+    return AggResult(r.groups, {name: r.values}, r.valid, r.num_groups)
+
+
+def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
+            n_valid=None, use_xla_sort: bool = False,
+            interpret: bool | None = None, tile: int = 1024):
+    """Run a :class:`Query` (planned on the fly) or a prebuilt :class:`Plan`.
+
+    Args:
+      plan_or_query: the spec; a ``Plan`` skips re-planning (hot loops).
+      groups: [N] group-id column (may be ``None`` for
+        ``Query(group_by=False)``).
+      keys:   [N] value column.
+      state: streaming queries only — carries from the previous call
+        (``None`` starts a fresh stream).
+      backend: override the plan's backend (re-plans when it differs).
+      n_valid: traced prefix-length override of ``query.n_valid``.
+      use_xla_sort: reference backend — use ``lax.sort`` instead of the
+        bitonic network for per-window sorting.
+      interpret: kernel backends — force/suppress Pallas interpret mode
+        (``None``: the capability probe picks interpret on CPU).
+      tile: pallas group-by backend — kernel tile length.
+
+    Returns:
+      ``(AggResult, new_state)``; ``new_state`` is ``None`` unless the query
+      streams.
+    """
+    if isinstance(plan_or_query, Plan):
+        p = plan_or_query
+        if backend is not None and backend != p.backend:
+            p = plan(p.query, backend=backend)
+    else:
+        p = plan(plan_or_query, backend=backend)
+
+    groups, keys, n_valid = _prepare_inputs(p.query, groups, keys, n_valid)
+
+    if p.path == "stream":
+        if state is None:
+            state = init_stream_state(p, keys.dtype)
+        (g, values, valid, num, _rr), new_state = stream_fn(p)(
+            groups, keys, state, n_valid)
+        return AggResult(g, values, valid, num), new_state
+
+    if p.path == "window":
+        if n_valid is not None:
+            raise ValueError("n_valid applies to non-windowed queries")
+        res = _execute_window(p, groups, keys, use_xla_sort=use_xla_sort,
+                              interpret=interpret)
+    else:
+        res = _execute_engine(p, groups, keys, n_valid, tile=tile,
+                              interpret=interpret)
+    return res, None

@@ -1,0 +1,175 @@
+"""Backward compatibility of the legacy entry points.
+
+Every pre-refactor public entry point must (a) return bit-identical results
+vs its pre-refactor oracle — the Python reference semantics plus element
+equality with the internal implementation it used to be — and (b) emit
+exactly **one** DeprecationWarning per call (the shim warns; the internal
+path it delegates to must not trigger further shims).
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GroupAggResult, StreamResult, group_by_aggregate,
+                        multi_aggregate, swag, swag_median)
+from repro.core.swag import MedianResult, _swag, _swag_median
+from repro.kernels.groupagg.ops import group_by_aggregate_tpu
+from repro.kernels.swag.ops import SwagResult, swag_tpu
+from conftest import PY_OPS, py_group_aggregate, sorted_stream
+
+WS, WA = 32, 16
+
+
+def one_warning(fn, *args, **kwargs):
+    """Run fn, assert exactly one DeprecationWarning, return the result."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "repro.query" in str(w.message)]
+    assert len(dep) == 1, \
+        f"{fn.__name__}: {len(dep)} DeprecationWarnings, want exactly 1: " \
+        f"{[str(w.message) for w in caught]}"
+    return out
+
+
+def py_windows(g, k, op, ws=WS, wa=WA):
+    """Per-window Python oracle (the pre-refactor swag semantics)."""
+    out = []
+    for s in range(0, len(g) - ws + 1, wa):
+        out.append(py_group_aggregate(g[s:s + ws], k[s:s + ws], PY_OPS[op]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# group_by_aggregate / multi_aggregate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "min", "count", "distinct_count"])
+def test_group_by_aggregate_shim(op, rng):
+    g, k = sorted_stream(rng, 128, 9, full_sort=True)
+    res = one_warning(group_by_aggregate, jnp.array(g), jnp.array(k), op)
+    assert isinstance(res, GroupAggResult)
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+    np.testing.assert_array_equal(np.array(res.values[:n]), ov)
+    assert not np.array(res.valid[n:]).any()
+
+
+def test_multi_aggregate_shim(rng):
+    g, k = sorted_stream(rng, 128, 9, full_sort=True)
+    ops = ("sum", "min", "distinct_count")
+    out = one_warning(multi_aggregate, jnp.array(g), jnp.array(k), ops)
+    assert set(out) == set(ops)
+    for op in ops:
+        res = out[op]
+        assert isinstance(res, GroupAggResult)
+        og, ov = py_group_aggregate(g, k, PY_OPS[op])
+        n = int(res.num_groups)
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+        np.testing.assert_array_equal(np.array(res.values[:n]), ov)
+
+
+# ---------------------------------------------------------------------------
+# swag / swag_median
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("panes", [None, False, True])
+def test_swag_shim(op, panes, rng):
+    g = rng.integers(0, 6, 96).astype(np.int32)
+    k = rng.integers(0, 50, 96).astype(np.int32)
+    res = one_warning(swag, jnp.array(g), jnp.array(k), ws=WS, wa=WA, op=op,
+                      use_xla_sort=True, panes=panes)
+    assert isinstance(res, GroupAggResult)
+    # bit-identical vs the pre-refactor implementation (now internal)
+    want = _swag(jnp.array(g), jnp.array(k), ws=WS, wa=WA, op=op,
+                 use_xla_sort=True, panes=panes)
+    for a, b in zip(res, want):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    # and vs the Python window oracle
+    for w, (og, ov) in enumerate(py_windows(g, k, op)):
+        n = int(res.num_groups[w])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.groups[w, :n]), og)
+        np.testing.assert_array_equal(np.array(res.values[w, :n]), ov)
+
+
+def test_swag_shim_median_still_raises(rng):
+    with pytest.raises(ValueError, match="median"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            swag(jnp.zeros(64, jnp.int32), jnp.zeros(64, jnp.int32),
+                 ws=WS, wa=WA, op="median")
+
+
+@pytest.mark.parametrize("panes", [None, False])
+def test_swag_median_shim(panes, rng):
+    g = rng.integers(0, 6, 96).astype(np.int32)
+    k = rng.integers(0, 50, 96).astype(np.int32)
+    res = one_warning(swag_median, jnp.array(g), jnp.array(k), ws=WS, wa=WA,
+                      use_xla_sort=True, panes=panes)
+    assert isinstance(res, MedianResult)
+    want = _swag_median(jnp.array(g), jnp.array(k), ws=WS, wa=WA,
+                        use_xla_sort=True, panes=panes)
+    for a, b in zip(res, want):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    for w, (og, ov) in enumerate(py_windows(g, k, "median")):
+        n = int(res.num_groups[w])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.medians[w, :n]), ov)
+
+
+# ---------------------------------------------------------------------------
+# kernel wrappers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "mean"])
+def test_group_by_aggregate_tpu_shim(op, rng):
+    g, k = sorted_stream(rng, 300, 11)
+    res = one_warning(group_by_aggregate_tpu, jnp.array(g), jnp.array(k), op,
+                      tile=128)
+    assert isinstance(res, GroupAggResult)
+    og, ov = py_group_aggregate(g, k, PY_OPS[op])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+    np.testing.assert_allclose(np.array(res.values[:n], np.float64), ov,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", ["sum", "median"])
+@pytest.mark.parametrize("panes", [None, False])
+def test_swag_tpu_shim(op, panes, rng):
+    g = rng.integers(0, 6, 128).astype(np.int32)
+    k = rng.integers(0, 50, 128).astype(np.int32)
+    res = one_warning(swag_tpu, jnp.array(g), jnp.array(k), ws=WS, wa=WA,
+                      op=op, panes=panes)
+    assert isinstance(res, SwagResult)
+    for w, (og, ov) in enumerate(py_windows(g, k, op)):
+        n = int(res.num_groups[w])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.groups[w, :n]), og)
+        np.testing.assert_array_equal(np.array(res.values[w, :n]), ov)
+
+
+def test_streaming_aggregator_not_deprecated(rng):
+    """StreamingAggregator is rewired, not deprecated — zero warnings."""
+    from repro.core import StreamingAggregator
+    g, k = sorted_stream(rng, 64, 5)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        agg = StreamingAggregator("sum")
+        out = agg.push(jnp.array(g), jnp.array(k))
+        agg.flush()
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "repro.query" in str(w.message)]
+    assert not dep, [str(w.message) for w in dep]
+    assert isinstance(out, StreamResult)

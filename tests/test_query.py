@@ -1,0 +1,386 @@
+"""The unified query-plan API: spec validation, planner dispatch, backend
+registry, multi-op fusion (sort-once), streaming state threading.
+
+Runs warning-clean by construction — the CI deprecation-strict leg executes
+this module with ``-W error::DeprecationWarning`` to prove the new API never
+routes through a legacy shim internally.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import StreamingAggregator
+from repro.core import sorter as _sorter_mod
+from repro.core.swag import _swag, _swag_median, num_windows
+from repro.kernels import registry
+from repro.query import (AggResult, Query, Window, canonical_op, execute,
+                         plan)
+from conftest import PY_OPS, py_group_aggregate, sorted_stream
+
+ACCEPT_OPS = ("sum", "min", "dc")
+ACCEPT_WS, ACCEPT_WA = 1024, 256
+
+
+def _stream(rng, n=2048, n_groups=16):
+    g = rng.integers(0, n_groups, n).astype(np.int32)
+    k = rng.integers(0, 1000, n).astype(np.int32)
+    return jnp.array(g), jnp.array(k)
+
+
+def _masked(res: AggResult, name: str):
+    v = np.array(res.valid)
+    return (np.array(res.groups)[v], np.array(res.values[name])[v],
+            np.array(res.num_groups))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance query: Query(ops=("sum","min","dc"), Window(1024, 256))
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas-panes"])
+def test_acceptance_multi_op_query(backend, rng, monkeypatch):
+    """One declarative multi-op query, auto-dispatched (via REPRO_BACKEND)
+    onto both the reference and the pane-Pallas backends, returning one
+    AggResult that matches every per-op legacy result element-exactly."""
+    g, k = _stream(rng)
+    q = Query(ops=ACCEPT_OPS, window=Window(ws=ACCEPT_WS, wa=ACCEPT_WA))
+
+    # dispatch through the env-var override (the "auto dispatch" seam)
+    monkeypatch.setenv(registry.BACKEND_ENV, backend)
+    p = plan(q)
+    assert p.backend == backend
+    res, state = execute(p, g, k, use_xla_sort=True)
+    assert state is None
+
+    nw = num_windows(g.shape[-1], ACCEPT_WS, ACCEPT_WA)
+    assert res.groups.shape == (nw, ACCEPT_WS)
+    assert set(res.values) == {"sum", "min", "distinct_count"}
+
+    valid = np.array(res.valid)
+    for op in ("sum", "min", "distinct_count"):
+        legacy = _swag(g, k, ws=ACCEPT_WS, wa=ACCEPT_WA, op=op,
+                       use_xla_sort=True)
+        assert np.array_equal(np.array(legacy.valid), valid), op
+        assert np.array_equal(np.array(legacy.groups)[valid],
+                              np.array(res.groups)[valid]), op
+        assert np.array_equal(np.array(legacy.values)[valid],
+                              np.array(res.values[op])[valid]), op
+        assert np.array_equal(np.array(legacy.num_groups),
+                              np.array(res.num_groups)), op
+
+
+def test_fused_multi_op_sorts_once(rng, monkeypatch):
+    """The fused reference path performs the pane framing + sort exactly
+    once; N single-op queries trace N sorts."""
+    g, k = _stream(rng)
+    calls = [0]
+    orig = _sorter_mod.sort_pairs_xla
+
+    def counting(*a, **kw):
+        calls[0] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(_sorter_mod, "sort_pairs_xla", counting)
+
+    q = Query(ops=ACCEPT_OPS, window=Window(ws=ACCEPT_WS, wa=ACCEPT_WA))
+    p = plan(q, backend="reference")
+    jax.make_jaxpr(
+        lambda g, k: execute(p, g, k, use_xla_sort=True)[0].values)(g, k)
+    assert calls[0] == 1, f"fused query traced {calls[0]} sorts, want 1"
+
+    calls[0] = 0
+    singles = [plan(Query(ops=(op,), window=Window(ws=ACCEPT_WS,
+                                                   wa=ACCEPT_WA)),
+                    backend="reference") for op in ACCEPT_OPS]
+    jax.make_jaxpr(
+        lambda g, k: [execute(s, g, k, use_xla_sort=True)[0].values
+                      for s in singles])(g, k)
+    assert calls[0] == len(ACCEPT_OPS)
+
+
+def test_fused_pallas_panes_sorts_once(rng, monkeypatch):
+    """The pane-Pallas multi-op path calls the pane-sort prologue kernel
+    exactly once for all ops."""
+    from repro.kernels.swag import kernel as _kern
+    g, k = _stream(rng, n=1024)
+    calls = [0]
+    orig = _kern.sort_panes_pallas
+
+    def counting(*a, **kw):
+        calls[0] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(_kern, "sort_panes_pallas", counting)
+    q = Query(ops=ACCEPT_OPS, window=Window(ws=256, wa=64))
+    execute(q, g, k, backend="pallas-panes")
+    assert calls[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# non-windowed engine path
+# ---------------------------------------------------------------------------
+
+def test_engine_multi_op_matches_oracle(rng):
+    g, k = sorted_stream(rng, 256, 11, full_sort=True)
+    res, _ = execute(Query(ops=("sum", "count", "dc")), jnp.array(g),
+                     jnp.array(k))
+    n = int(res.num_groups)
+    for op in ("sum", "count", "distinct_count"):
+        og, ov = py_group_aggregate(g, k, PY_OPS[op])
+        assert n == len(og)
+        np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+        np.testing.assert_array_equal(np.array(res.values[op][:n]), ov)
+
+
+def test_engine_pallas_backend_matches_reference(rng):
+    g, k = sorted_stream(rng, 512, 9)
+    ref, _ = execute(Query(ops=("sum", "max")), jnp.array(g), jnp.array(k),
+                     backend="reference")
+    pal, _ = execute(Query(ops=("sum", "max")), jnp.array(g), jnp.array(k),
+                     backend="pallas", tile=256)
+    n = int(ref.num_groups)
+    assert n == int(pal.num_groups)
+    for op in ("sum", "max"):
+        np.testing.assert_array_equal(np.array(ref.values[op][:n]),
+                                      np.array(pal.values[op][:n]))
+
+
+def test_group_by_false(rng):
+    k = rng.integers(0, 100, 128).astype(np.int32)
+    res, _ = execute(Query(ops=("sum", "count"), group_by=False), None,
+                     jnp.array(k))
+    assert int(res.num_groups) == 1
+    assert int(res.values["sum"][0]) == int(k.sum())
+    assert int(res.values["count"][0]) == 128
+
+
+def test_n_valid(rng):
+    g, k = sorted_stream(rng, 128, 9)
+    full, _ = execute(Query(ops=("sum",)), jnp.array(g[:100]),
+                      jnp.array(k[:100]))
+    pad, _ = execute(Query(ops=("sum",)), jnp.array(g), jnp.array(k),
+                     n_valid=jnp.asarray(100))
+    n = int(full.num_groups)
+    assert n == int(pad.num_groups)
+    np.testing.assert_array_equal(np.array(full.values["sum"][:n]),
+                                  np.array(pad.values["sum"][:n]))
+
+
+# ---------------------------------------------------------------------------
+# windowed median / interpolate
+# ---------------------------------------------------------------------------
+
+def test_median_rides_along(rng):
+    g, k = _stream(rng, n=512, n_groups=5)
+    q = Query(ops=("median", "count"), window=Window(ws=64, wa=32),
+              interpolate=True)
+    res, _ = execute(q, g, k, use_xla_sort=True)
+    legacy = _swag_median(g, k, ws=64, wa=32, interpolate=True,
+                          use_xla_sort=True)
+    valid = np.array(res.valid)
+    assert np.array_equal(np.array(legacy.valid), valid)
+    assert np.array_equal(np.array(legacy.medians)[valid],
+                          np.array(res.values["median"])[valid])
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+def test_streaming_query_matches_aggregator(rng):
+    g, k = sorted_stream(rng, 128, 13)
+    agg = StreamingAggregator("sum")
+    q = Query(ops=("sum",), streaming=True)
+    state = None
+    for lo in range(0, 128, 32):
+        want = agg.push(jnp.array(g[lo:lo + 32]), jnp.array(k[lo:lo + 32]))
+        got, state = execute(q, jnp.array(g[lo:lo + 32]),
+                             jnp.array(k[lo:lo + 32]), state=state)
+        np.testing.assert_array_equal(np.array(want.valid),
+                                      np.array(got.valid))
+        np.testing.assert_array_equal(np.array(want.groups),
+                                      np.array(got.groups))
+        np.testing.assert_array_equal(np.array(want.values),
+                                      np.array(got.values["sum"]))
+
+
+def test_streaming_multi_op(rng):
+    g, k = sorted_stream(rng, 96, 7)
+    q = Query(ops=("sum", "count"), streaming=True)
+    state = None
+    got_sum, got_cnt = {}, {}
+    for lo in range(0, 96, 32):
+        res, state = execute(q, jnp.array(g[lo:lo + 32]),
+                             jnp.array(k[lo:lo + 32]), state=state)
+        for gi, s, c, va in zip(np.array(res.groups),
+                                np.array(res.values["sum"]),
+                                np.array(res.values["count"]),
+                                np.array(res.valid)):
+            if va:
+                got_sum[int(gi)] = int(s)
+                got_cnt[int(gi)] = int(c)
+    og, ov = py_group_aggregate(g, k, PY_OPS["sum"])
+    _, oc = py_group_aggregate(g, k, PY_OPS["count"])
+    # last group stays open (no flush through the raw query path)
+    for gi, vi, ci in list(zip(og, ov, oc))[:-1]:
+        assert got_sum[gi] == vi
+        assert got_cnt[gi] == ci
+
+
+def test_make_query_step_streaming(rng):
+    from repro.distributed.steps import make_query_step
+    from repro.query import init_stream_state
+    g, k = sorted_stream(rng, 64, 5)
+    step, p = make_query_step(Query(ops=("sum",), streaming=True))
+    state = init_stream_state(p)
+    res1, state = step(jnp.array(g[:32]), jnp.array(k[:32]), state)
+    res2, state = step(jnp.array(g[32:]), jnp.array(k[32:]), state)
+    agg = StreamingAggregator("sum")
+    want1 = agg.push(jnp.array(g[:32]), jnp.array(k[:32]))
+    want2 = agg.push(jnp.array(g[32:]), jnp.array(k[32:]))
+    for want, got in ((want1, res1), (want2, res2)):
+        np.testing.assert_array_equal(np.array(want.values),
+                                      np.array(got.values["sum"]))
+
+
+def test_make_query_step_batch(rng):
+    from repro.distributed.steps import make_query_step
+    g, k = sorted_stream(rng, 64, 5)
+    step, p = make_query_step(Query(ops=("sum",)), backend="reference")
+    res = step(jnp.array(g), jnp.array(k))
+    og, ov = py_group_aggregate(g, k, PY_OPS["sum"])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_array_equal(np.array(res.values["sum"][:n]), ov)
+
+
+# ---------------------------------------------------------------------------
+# spec + planner validation
+# ---------------------------------------------------------------------------
+
+def test_op_aliases():
+    q = Query(ops=("dc", "avg"))
+    assert q.ops == ("distinct_count", "mean")
+    assert canonical_op("dc") == "distinct_count"
+
+
+def test_single_op_string_normalised():
+    assert Query(ops="sum").ops == ("sum",)
+
+
+def test_plan_is_reusable_and_hashable(rng):
+    p = plan(Query(ops=("sum",)), backend="reference")
+    hash(p)  # Plans must be hashable (jit-static friendly)
+    g, k = sorted_stream(rng, 64, 5)
+    a, _ = execute(p, jnp.array(g), jnp.array(k))
+    b, _ = execute(p, jnp.array(g), jnp.array(k))
+    np.testing.assert_array_equal(np.array(a.values["sum"]),
+                                  np.array(b.values["sum"]))
+
+
+def test_auto_backend_on_cpu_is_reference():
+    assert plan(Query(ops=("sum",))).backend == "reference"
+
+
+@pytest.mark.parametrize("bad_query,exc", [
+    (dict(ops=()), ValueError),                                  # no ops
+    (dict(ops=("sum", "sum")), ValueError),                      # duplicate
+    (dict(ops=("dc", "distinct_count")), ValueError),            # alias dup
+])
+def test_query_spec_errors(bad_query, exc):
+    with pytest.raises(exc):
+        Query(**bad_query)
+
+
+@pytest.mark.parametrize("query,backend,exc", [
+    (dict(ops=("median",)), None, NotImplementedError),          # no window
+    (dict(ops=("sum",), window=Window(ws=16), streaming=True), None,
+     NotImplementedError),                                       # stream+win
+    (dict(ops=("sum",), window=Window(ws=16, ws_per_group={0: 8})), None,
+     NotImplementedError),                                       # per-group
+    (dict(ops=("sum",), interpolate=True), None, ValueError),    # no median
+    (dict(ops=("sum",), window=Window(ws=16), n_valid=8), None,
+     ValueError),                                                # n_valid+win
+    (dict(ops=("sum",)), "nope", ValueError),                    # unknown be
+    (dict(ops=("argmin",)), "pallas", ValueError),               # unsupported
+    (dict(ops=("sum",), window=Window(ws=24)), "pallas", ValueError),
+    (dict(ops=("sum",), streaming=True), "pallas", ValueError),
+    # an explicit pane force is never silently dropped by the re-sort kernel
+    (dict(ops=("sum",), window=Window(ws=64, wa=16, panes=True)), "pallas",
+     ValueError),
+    (dict(ops=("sum",), window=Window(ws=64, wa=16, panes=False)),
+     "pallas-panes", ValueError),
+])
+def test_plan_errors(query, backend, exc):
+    with pytest.raises(exc):
+        plan(Query(**query), backend=backend)
+
+
+def test_pallas_accepts_degenerate_pane_force():
+    """wa == ws: the pane path *is* the per-window re-sort, so panes=True
+    stays valid on the plain pallas backend (legacy swag_tpu behaviour)."""
+    p = plan(Query(ops=("sum",), window=Window(ws=64, wa=64, panes=True)),
+             backend="pallas")
+    assert p.backend == "pallas"
+
+
+def test_backend_env_var(monkeypatch):
+    monkeypatch.setenv(registry.BACKEND_ENV, "pallas")
+    assert plan(Query(ops=("sum",))).backend == "pallas"
+    # explicit argument beats the environment
+    assert plan(Query(ops=("sum",)), backend="reference").backend == \
+        "reference"
+    monkeypatch.setenv(registry.BACKEND_ENV, "bogus")
+    with pytest.raises(ValueError):
+        plan(Query(ops=("sum",)))
+
+
+def test_register_backend_extension(rng):
+    name = "test-backend"
+    try:
+        registry.register_backend(registry.Backend(
+            name, lambda q: None if not q.streaming else "no streams"))
+        assert name in registry.available_backends()
+        assert registry.get_backend(name).supports(
+            Query(ops=("sum",))) is None
+    finally:
+        registry._BACKENDS.pop(name, None)
+
+
+def test_window_defaults():
+    w = Window(ws=64)
+    assert w.wa == 64  # tumbling by default
+    with pytest.raises(ValueError):
+        Window(ws=0)
+    with pytest.raises(ValueError):
+        Window(ws=16, wa=-1)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas", "pallas-panes"])
+def test_window_shorter_stream_empty_result(backend, rng):
+    """A stream shorter than one window yields an empty [0, WS] result on
+    every backend (auto dispatch must not turn it into a crash)."""
+    g, k = _stream(rng, n=64)
+    q = Query(ops=("sum", "min"), window=Window(ws=128, wa=32))
+    res, _ = execute(q, g, k, backend=backend)
+    assert res.groups.shape == (0, 128)
+    assert res.num_groups.shape == (0,)
+    for op in ("sum", "min"):
+        assert res.values[op].shape == (0, 128)
+
+
+def test_reference_honours_window_panes(rng, monkeypatch):
+    """Window(panes=...) forces the pane / re-sort arm on the reference
+    backend — and both are element-exact."""
+    g, k = _stream(rng, n=1024)
+    res_p, _ = execute(Query(ops=("sum",),
+                             window=Window(ws=128, wa=32, panes=True)),
+                       g, k, backend="reference")
+    res_r, _ = execute(Query(ops=("sum",),
+                             window=Window(ws=128, wa=32, panes=False)),
+                       g, k, backend="reference")
+    np.testing.assert_array_equal(np.array(res_p.values["sum"]),
+                                  np.array(res_r.values["sum"]))
