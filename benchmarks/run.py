@@ -4,7 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   complexity_table    -> paper Table I (entity model + fused-vs-modular HLO)
   speedup_groupby     -> paper §IV speedup protocol (distribution sweep)
   swag_bench          -> paper §V / Fig. 4 SWAG throughput (incl. median,
-                         re-sort baseline vs pane path)
+                         re-sort baseline vs pane path, plus
+                         swag_per_group/* rows: per-group windows on the
+                         shared pane store, num_groups x WS_g)
   query_overhead      -> repro.query planner+dispatch cost vs direct calls
                          + fused multi-op vs per-op (sort-once asserted)
   sort_bench          -> sorter substrate (FLiMS role)

@@ -11,6 +11,11 @@ Both arms are declarative queries on the unified API: the pane choice is
 ``Window(panes=...)`` in the spec, planned once and executed through the
 reference backend (``use_xla_sort=True`` keeps the sorter substrate equal).
 
+The ``swag_per_group/*`` rows sweep the pane-store subsystem (the paper's
+per-group-window approximation): num_groups x WS_g on
+``Window(ws_per_group=...)``, reporting stream-ingest throughput (the push
+scan + one replay per WA chunk).
+
 Rows carry a numeric ``tuples_per_s`` so ``run.py`` can emit the
 machine-readable ``BENCH_swag.json`` tracked across PRs.
 """
@@ -57,4 +62,35 @@ def run() -> list[dict]:
                 if wa < ws:
                     add(f"swag/{op}_ws{ws}_wa{wa}_panes",
                         arm(op, ws, wa, True), ws, wa)
+
+    # per-group windows on the shared pane store: sweep num_groups x WS_g
+    # (ws_per_group as a uniform int; throughput = stream tuples ingested,
+    # one replay per WA chunk riding along).  Capacity is sized so every
+    # group's full window fits — the rows measure real WS_g windows, not
+    # an eviction-starved store.
+    n_pg, wa_pg = 4096, 128
+
+    def pergroup_arm(num_groups, ws_g):
+        cap = num_groups * (ws_g // wa_pg + 1) + 4
+        p = plan(Query(ops=("sum",),
+                       window=Window(ws=ws_g, wa=wa_pg, ws_per_group=ws_g,
+                                     capacity=cap)),
+                 backend="reference")
+        return jax.jit(lambda g, k: execute(p, g, k)[0].values["sum"])
+
+    for num_groups in (8, 32):
+        gp = jnp.array(rng.integers(0, num_groups, n_pg).astype(np.int32))
+        kp = jnp.array(rng.integers(0, 1000, n_pg).astype(np.int32))
+        for ws_g in (256, 1024):
+            fn = pergroup_arm(num_groups, ws_g)
+            us = time_fn(fn, gp, kp, iters=2, warmup=1)
+            tput = n_pg / (us / 1e6)
+            rows.append({
+                "name": f"swag_per_group/sum_g{num_groups}_ws{ws_g}"
+                        f"_wa{wa_pg}",
+                "us_per_call": round(us, 1),
+                "tuples_per_s": tput,
+                "derived": f"evals={n_pg // wa_pg} "
+                           f"tuples_per_s={tput:.3e}",
+            })
     return rows

@@ -7,14 +7,16 @@ Public surface:
   * streaming:  rolling multi-batch driver (non-blocking pipeline semantics)
   * sorter:     bitonic network (FLiMS adaptation) + lax.sort baseline
   * swag:       sliding-window aggregation incl. median (+ fused multi-op)
+  * panestore:  shared, evicting per-group pane store (the paper's
+                approximation for SWAG with per-group windows)
   * complexity: the paper's entity-count model
 
 The recommended entry point is the unified query-plan API
 (:mod:`repro.query`): declare a ``Query`` (ops, optional group_by, optional
 ``Window(ws, wa)``, median/interpolate, streaming) and ``execute`` it — a
 planner lowers it onto a backend from :mod:`repro.kernels.registry`
-(``reference`` | ``pallas`` | ``pallas-panes`` | ``auto``, overridable via
-the ``REPRO_BACKEND`` env var).  ``Query`` / ``Window`` / ``AggResult`` /
+(``reference`` | ``pallas`` | ``pallas-panes`` | ``pallas-panestore`` |
+``auto``, overridable via the ``REPRO_BACKEND`` env var).  ``Query`` / ``Window`` / ``AggResult`` /
 ``plan`` / ``execute`` are re-exported here for convenience.
 
 The historical per-shape entry points (``group_by_aggregate``,
@@ -33,10 +35,12 @@ from repro.core.segscan import (  # noqa: F401
 from repro.core.sorter import (  # noqa: F401
     bitonic_merge, bitonic_sort, merge_presorted, next_pow2, sort_pairs,
     sort_pairs_xla)
+from repro.core.panestore import (  # noqa: F401
+    PaneStoreSpec, PaneStoreState, init_store)
 from repro.core.streaming import StreamingAggregator, StreamResult  # noqa: F401
 from repro.core.swag import (  # noqa: F401
     frame_panes, frame_windows, num_windows, pane_compatible, swag,
-    swag_median, swag_multi, swag_panes)
+    swag_median, swag_multi, swag_panes, swag_per_group)
 from repro.core import complexity  # noqa: F401
 
 _QUERY_NAMES = ("Query", "Window", "AggResult", "Plan", "plan", "execute",

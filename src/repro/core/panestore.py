@@ -1,0 +1,439 @@
+"""Per-group pane store — the paper's approximation for SWAG with per-group
+windows.
+
+The headline functionality claim of the paper is SWAG *with groups* at up to
+4x the window sizes of the state of the art, achieved by **approximating
+per-group windows**: instead of per-group hash state sized for the worst
+case, keep only the last ``WS_g`` tuples *per group* in a shared on-chip pane
+store and replay each group's pane subset through the merge network — no
+DRAM, no per-group hash state.  This module is that store as a static-shape
+JAX subsystem:
+
+  * a fixed-capacity ring of ``capacity`` pane slots, each holding up to
+    ``WA`` tuples of **one** group (struct-of-arrays; the shared on-chip
+    buffer of Gulisano et al.'s multiway-aggregation ADTs — one budget, no
+    spill);
+  * a **per-group pane index**: a group's slots are found by their ``owner``
+    tag and ordered by ``base`` (the within-group sequence number of the
+    slot's first tuple) — group id -> its last ``ceil(WS_g/WA)`` (+1
+    straddling) pane slots, recovered by one sort of the slot directory;
+  * panes are **sorted once**, at close time (when the WA-th tuple arrives),
+    so replay merges presorted runs instead of re-sorting — the amortisation
+    argument of the pane-based SWAG layer (PR 1) carried over to per-group
+    windows;
+  * **retirement + eviction**: a slot is *retired* (freed) the moment none
+    of its tuples can fall in its group's last ``WS_g`` (worst-case constant
+    bookkeeping per push, in the spirit of Tangwongsan et al.'s in-order
+    SWAG); when an allocation finds no free slot the globally **oldest**
+    pane (smallest allocation stamp) is evicted — the victim group's
+    effective window shrinks, which is the paper's approximation knob;
+  * **replay**: gather a group's pane subset, feed it through the existing
+    bitonic merge network (``sorter.merge_presorted``) with a per-lane
+    liveness mask, compact, and apply every requested operator to the one
+    merged window (element-exact for sum/count/min/max/median/mean/dc;
+    engine-tail fallback — exact vs a full re-sort — otherwise).
+
+Because each tuple carries its within-group sequence number (``seq``)
+through the pane sort as payload, the replayed window is the group's last
+``WS_g`` tuples *exactly* (not pane-quantised): lanes with
+``seq < m_g - WS_g`` stay in their sorted position but are masked dead, so
+closed panes remain presorted runs for the merge network.
+
+The streaming carry of ``Query(..., window=..., streaming=True)`` *is* a
+:class:`PaneStoreState`; the batch entry (:func:`repro.core.swag.
+swag_per_group`) threads it over ``WA``-sized stream chunks and emits one
+replay per chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as _engine
+from repro.core import sorter
+from repro.core.combiners import Combiner, get_combiner
+
+Array = jax.Array
+
+PAD_GROUP = _engine.PAD_GROUP
+
+#: ops the replay tail computes directly from the merged, compacted window
+#: (element-exact vs the naive keep-last-WS_g reference)
+DIRECT_OPS = frozenset(
+    {"sum", "count", "min", "max", "mean", "median", "distinct_count"})
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class PaneStoreSpec:
+    """Static configuration of one pane store (hashable; jit-static).
+
+    ``wa``: pane width (power of two — the merge network's wiring
+    constraint).  ``capacity``: number of pane slots in the shared buffer.
+    ``default_ws``: window size for groups not listed in ``per_group``.
+    ``per_group``: sorted tuple of ``(group_id, ws)`` overrides.
+    """
+    wa: int
+    capacity: int
+    default_ws: int
+    per_group: tuple = ()
+
+    def __post_init__(self):
+        if self.wa <= 0 or self.wa & (self.wa - 1):
+            raise ValueError(f"pane width wa must be a positive power of "
+                             f"two, got {self.wa}")
+        if self.default_ws <= 0:
+            raise ValueError(f"default_ws must be positive, got "
+                             f"{self.default_ws}")
+        pairs = tuple(sorted((int(g), int(w)) for g, w in self.per_group))
+        for g, w in pairs:
+            if w <= 0:
+                raise ValueError(f"ws_per_group[{g}] must be positive, "
+                                 f"got {w}")
+        object.__setattr__(self, "per_group", pairs)
+        if self.capacity < self.min_capacity:
+            raise ValueError(
+                f"capacity={self.capacity} cannot hold even one group's "
+                f"window (need >= {self.min_capacity} slots)")
+
+    @property
+    def max_ws(self) -> int:
+        return max([self.default_ws] + [w for _, w in self.per_group])
+
+    @property
+    def max_panes(self) -> int:
+        """Most slots one group can hold: ceil(WS_g/WA) full panes plus one
+        straddling the window's trailing edge."""
+        return _ceil_div(self.max_ws, self.wa) + 1
+
+    @property
+    def min_capacity(self) -> int:
+        return self.max_panes
+
+    @property
+    def runs(self) -> int:
+        """Replay width in runs: max_panes padded to a power of two (the
+        multiway merge needs a power-of-two run count)."""
+        return sorter.next_pow2(self.max_panes)
+
+    def ws_of(self, gids: Array) -> Array:
+        """Vectorised per-group window-size lookup (the pane index's only
+        per-group metadata; the dict is static, so this is a handful of
+        compares, not hash state)."""
+        ws = jnp.full(jnp.shape(gids), self.default_ws, jnp.int32)
+        for g, w in self.per_group:
+            ws = jnp.where(gids == g, w, ws)
+        return ws
+
+
+def default_capacity(wa: int, default_ws: int, per_group: tuple = ()) -> int:
+    """Heuristic capacity: room for every listed group's window plus four
+    default-window groups, rounded up to a power of two (min 16)."""
+    need = sum(_ceil_div(w, wa) + 1 for _, w in per_group)
+    need += 4 * (_ceil_div(default_ws, wa) + 1)
+    return sorter.next_pow2(max(16, need))
+
+
+class PaneStoreState(NamedTuple):
+    """The shared, evicting pane buffer (one pytree — the streaming carry).
+
+    Slot ``i`` holds up to ``WA`` tuples of group ``owner[i]``
+    (``PAD_GROUP`` marks a free slot).  ``keys`` are arrival-ordered while
+    the pane is open and (key-)sorted once it closes; ``seqs`` carries each
+    tuple's within-group sequence number through the sort as payload.
+    ``base`` is the seq of the slot's first tuple (the per-group pane
+    index's ordering key); ``stamp`` is the global allocation counter value
+    (the eviction order); ``clock`` is the next stamp.
+    """
+    owner: Array   # [C] int32
+    keys: Array    # [C, WA]
+    seqs: Array    # [C, WA] int32
+    count: Array   # [C] int32
+    base: Array    # [C] int32
+    stamp: Array   # [C] int32
+    clock: Array   # [] int32
+
+
+def init_store(spec: PaneStoreSpec, key_dtype=jnp.int32) -> PaneStoreState:
+    c, wa = spec.capacity, spec.wa
+    return PaneStoreState(
+        owner=jnp.full((c,), PAD_GROUP, jnp.int32),
+        keys=jnp.zeros((c, wa), key_dtype),
+        seqs=jnp.zeros((c, wa), jnp.int32),
+        count=jnp.zeros((c,), jnp.int32),
+        base=jnp.zeros((c,), jnp.int32),
+        stamp=jnp.full((c,), -1, jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
+              live: Array) -> PaneStoreState:
+    """Absorb one tuple (no-op when ``live`` is False) — the store's unit of
+    worst-case-constant work: locate the open pane via the index, append,
+    sort-on-close, retire dead panes, evict the globally oldest on overflow.
+    """
+    c, wa = spec.capacity, spec.wa
+    g = g.astype(jnp.int32)
+
+    mine = st.owner == g
+    any_mine = jnp.any(mine)
+    # the index: the group's newest slot is its max-base slot
+    newest = jnp.argmax(jnp.where(mine, st.base, -1))
+    m_g = jnp.where(any_mine, st.base[newest] + st.count[newest],
+                    jnp.zeros((), jnp.int32))
+    has_open = any_mine & (st.count[newest] < wa)
+
+    # allocation target when no open pane: first free slot, else evict the
+    # globally oldest pane (min stamp) — the approximation knob
+    free = st.owner == PAD_GROUP
+    any_free = jnp.any(free)
+    imax = jnp.iinfo(jnp.int32).max
+    oldest = jnp.argmin(jnp.where(free, imax, st.stamp))
+    slot = jnp.where(has_open, newest,
+                     jnp.where(any_free, jnp.argmax(free), oldest))
+
+    lane = jnp.where(has_open, st.count[slot], 0)
+    onehot = jnp.arange(c) == slot
+    at = onehot[:, None] & (jnp.arange(wa)[None, :] == lane)
+
+    new_keys = jnp.where(at & live, jnp.broadcast_to(k, st.keys.shape),
+                         st.keys)
+    new_seqs = jnp.where(at & live, m_g, st.seqs)
+    new_count = jnp.where(onehot & live,
+                          jnp.where(has_open, st.count + 1, 1), st.count)
+    new_owner = jnp.where(onehot & live & ~has_open, g, st.owner)
+    new_base = jnp.where(onehot & live & ~has_open, m_g, st.base)
+    new_stamp = jnp.where(onehot & live & ~has_open, st.clock, st.stamp)
+    clock = st.clock + (live & ~has_open).astype(jnp.int32)
+
+    # sort the pane once, the moment it closes (seq rides as payload)
+    closes = live & (new_count[slot] == wa)
+    row_k, row_s = new_keys[slot], new_seqs[slot]
+    order = jnp.argsort(row_k, stable=True)
+    sorted_row = onehot[:, None] & jnp.ones((1, wa), bool)
+    new_keys = jnp.where(sorted_row & closes, row_k[order][None, :], new_keys)
+    new_seqs = jnp.where(sorted_row & closes, row_s[order][None, :], new_seqs)
+
+    # retire this group's panes that no longer intersect its last WS_g
+    ws_g = spec.ws_of(g)
+    m_new = m_g + 1
+    dead = live & (new_owner == g) & (new_base + wa <= m_new - ws_g)
+    new_owner = jnp.where(dead, PAD_GROUP, new_owner)
+    new_count = jnp.where(dead, 0, new_count)
+    new_stamp = jnp.where(dead, -1, new_stamp)
+
+    return PaneStoreState(new_owner, new_keys, new_seqs, new_count,
+                          new_base, new_stamp, clock)
+
+
+def push(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
+         keys: Array, n_valid: Array | None = None) -> PaneStoreState:
+    """Stream one batch of tuples through the store (a ``lax.scan`` of the
+    constant-work single-tuple step — the software rendering of the
+    hardware's one-tuple-per-cycle ingest)."""
+    groups = jnp.asarray(groups, jnp.int32)
+    keys = jnp.asarray(keys, state.keys.dtype)
+    n = groups.shape[-1]
+    live = jnp.ones((n,), bool) if n_valid is None else jnp.arange(n) < n_valid
+
+    def step(st, x):
+        g, k, lv = x
+        return _push_one(spec, st, g, k, lv), None
+
+    state, _ = jax.lax.scan(step, state, (groups, keys, live))
+    return state
+
+
+class ReplayRuns(NamedTuple):
+    """One gathered replay snapshot: per output row (candidate group), its
+    pane subset flattened to ``runs * WA`` lanes of presorted runs.
+    ``run_valid`` already folds slot occupancy, open-pane fill *and*
+    staleness (``seq < m_g - WS_g``), so downstream consumers (reference
+    merge or the Pallas kernel) need no further per-group metadata."""
+    groups: Array      # [C] int32 unique live group ids, ascending, PAD tail
+    run_keys: Array    # [C, runs*WA] — each WA-run key-sorted ascending
+    run_valid: Array   # [C, runs*WA] bool — live lanes
+    num_groups: Array  # [] int32
+
+
+def gather_runs(spec: PaneStoreSpec, state: PaneStoreState) -> ReplayRuns:
+    """The per-group pane index, materialised: order the slot directory by
+    (owner, base), dedupe owners, and hand each group its (static-width)
+    pane subset as presorted runs with a liveness mask.
+
+    Open panes (arrival-ordered) are sorted here — every *closed* pane was
+    sorted exactly once at close, so the sort-once amortisation holds.
+    """
+    c, wa = spec.capacity, spec.wa
+    s = spec.runs
+    sentinel = _key_sentinel(state.keys.dtype)
+
+    so, sb, perm = jax.lax.sort(
+        (state.owner, state.base, jnp.arange(c, dtype=jnp.int32)),
+        num_keys=2)
+    occupied = so != PAD_GROUP
+    prev = jnp.concatenate([jnp.full((1,), PAD_GROUP, jnp.int32), so[:-1]])
+    firsts = occupied & ((so != prev) | (jnp.arange(c) == 0))
+    num = jnp.sum(firsts.astype(jnp.int32))
+
+    rank = jnp.cumsum(firsts.astype(jnp.int32)) - firsts.astype(jnp.int32)
+    scatter = jnp.where(firsts, rank, c)
+    ugroups = jnp.full((c + 1,), PAD_GROUP, jnp.int32).at[scatter].set(
+        so, mode="drop")[:c]
+    offsets = jnp.full((c + 1,), c, jnp.int32).at[scatter].set(
+        jnp.arange(c, dtype=jnp.int32), mode="drop")[:c]
+    n_occ = jnp.sum(occupied.astype(jnp.int32))
+    next_off = jnp.concatenate([offsets[1:], jnp.full((1,), c, jnp.int32)])
+    nslots = jnp.where(jnp.arange(c) < num,
+                       jnp.minimum(next_off, n_occ) - offsets, 0)
+
+    lanes = jnp.arange(wa)[None, :]
+
+    def row(r):
+        g = ugroups[r]
+        o, ns = offsets[r], nslots[r]
+        j = jnp.arange(s)
+        sidx = perm[jnp.clip(o + j, 0, c - 1)]
+        slot_ok = j < ns
+        rk = state.keys[sidx]                      # [S, WA]
+        rs = state.seqs[sidx]
+        rc = jnp.where(slot_ok, state.count[sidx], 0)
+        rb = state.base[sidx]
+        # newest slot is the last occupied one (base-ascending order)
+        last = jnp.clip(ns - 1, 0, s - 1)
+        m_g = jnp.where(ns > 0, rb[last] + rc[last], 0)
+        lo = m_g - spec.ws_of(g)
+
+        filled = lanes < rc[:, None]
+        # open (and padded) runs: push dead lanes to the tail and sort, so
+        # every run is a presorted ascending sequence for the merge network
+        is_sorted = rc == wa                        # closed => sorted once
+        sk = jnp.where(filled, rk, sentinel)
+        order = jnp.argsort(sk, axis=-1, stable=True)
+        srt_k = jnp.take_along_axis(sk, order, axis=-1)
+        srt_s = jnp.take_along_axis(rs, order, axis=-1)
+        srt_f = jnp.take_along_axis(filled, order, axis=-1)
+        rk = jnp.where(is_sorted[:, None], rk, srt_k)
+        rs = jnp.where(is_sorted[:, None], rs, srt_s)
+        filled = jnp.where(is_sorted[:, None], filled, srt_f)
+
+        lane_ok = slot_ok[:, None] & filled & (rs >= lo)
+        return rk.reshape(-1), lane_ok.reshape(-1)
+
+    run_keys, run_valid = jax.vmap(row)(jnp.arange(c))
+    return ReplayRuns(ugroups, run_keys, run_valid, num)
+
+
+def _key_sentinel(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).max
+    return jnp.inf
+
+
+def merged_window(spec: PaneStoreSpec, run_keys: Array, run_valid: Array
+                  ) -> tuple[Array, Array]:
+    """Merge one row's presorted runs and compact the live lanes to the
+    front: returns ``(keys_sorted_live_prefix, cnt)``.  This is the
+    reference rendering of the Pallas kernel's merge + shared butterfly
+    compaction."""
+    mk, mv = sorter.merge_presorted(
+        (run_keys, run_valid.astype(jnp.int32)), run=spec.wa, num_keys=1)
+    mv = mv == 1
+    # stable compaction of live lanes (keeps key order): scatter by rank
+    n = mk.shape[-1]
+    rank = jnp.cumsum(mv.astype(jnp.int32)) - mv.astype(jnp.int32)
+    idx = jnp.where(mv, rank, n)
+    out = jnp.full((n + 1,), _key_sentinel(mk.dtype), mk.dtype).at[idx].set(
+        mk, mode="drop")[:n]
+    return out, jnp.sum(mv.astype(jnp.int32))
+
+
+def _direct_tails(keys_c: Array, cnt: Array, names, *, key_dtype,
+                  interpolate: bool) -> dict:
+    """Every DIRECT_OPS value from one compacted, key-sorted live prefix —
+    shared by the reference replay and mirrored in the Pallas kernel."""
+    n = keys_c.shape[-1]
+    lane = jnp.arange(n)
+    live = lane < cnt
+    nonempty = cnt > 0
+    out = {}
+    for name in names:
+        if name == "count":
+            out[name] = cnt
+        elif name == "sum":
+            acc = get_combiner("sum").lift(jnp.zeros((), key_dtype)).dtype
+            out[name] = jnp.sum(jnp.where(live, keys_c, 0).astype(acc))
+        elif name == "min":
+            out[name] = jnp.where(nonempty, keys_c[0],
+                                  jnp.zeros((), keys_c.dtype))
+        elif name == "max":
+            v = jnp.sum(jnp.where(lane == cnt - 1, keys_c, 0))
+            out[name] = jnp.where(nonempty, v, 0).astype(keys_c.dtype)
+        elif name == "mean":
+            s = jnp.sum(jnp.where(live, keys_c, 0).astype(jnp.float32))
+            out[name] = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+        elif name == "median":
+            lo = jnp.sum(jnp.where(lane == jnp.maximum(cnt - 1, 0) // 2,
+                                   keys_c, 0))
+            hi = jnp.sum(jnp.where(lane == cnt // 2, keys_c, 0))
+            if interpolate:
+                med = (lo.astype(jnp.float32) + hi.astype(jnp.float32)) / 2.0
+            else:
+                med = lo.astype(keys_c.dtype)
+            out[name] = jnp.where(nonempty, med, 0).astype(med.dtype)
+        elif name == "distinct_count":
+            prev = jnp.concatenate(
+                [jnp.full((1,), _key_sentinel(keys_c.dtype), keys_c.dtype),
+                 keys_c[:-1]])
+            neq = (keys_c != prev) & live
+            out[name] = jnp.sum(neq.astype(jnp.int32))
+        else:  # pragma: no cover - guarded by replay()
+            raise ValueError(f"{name} is not a direct replay op")
+    return out
+
+
+def replay(spec: PaneStoreSpec, state: PaneStoreState, ops, *,
+           interpolate: bool = False):
+    """Evaluate every live group's window from the store (reference path).
+
+    Returns ``(groups [C], {name: values [C]}, valid [C], num_groups)`` —
+    the per-evaluation analogue of one :class:`repro.query.AggResult` row.
+    Ops are routed by *name*: DIRECT_OPS are computed straight off the
+    merged window (element-exact vs the naive keep-last-``WS_g``
+    reference; a :class:`Combiner` instance carrying one of those names is
+    assumed to mean the standard op); any other combiner falls back to an
+    engine pass over the merged, compacted window — exact vs a full
+    re-sort of the same window.
+    """
+    names = [op.name if isinstance(op, Combiner) else op for op in ops]
+    runs = gather_runs(spec, state)
+    key_dtype = state.keys.dtype
+
+    fallback = [(op, name) for op, name in zip(ops, names)
+                if name not in DIRECT_OPS]
+    direct = [name for name in names if name in DIRECT_OPS]
+
+    def row(g, rk, rv):
+        kc, cnt = merged_window(spec, rk, rv)
+        vals = _direct_tails(kc, cnt, direct, key_dtype=key_dtype,
+                             interpolate=interpolate)
+        if fallback:
+            gc = jnp.where(jnp.arange(kc.shape[-1]) < cnt, 0, PAD_GROUP)
+            for op, name in fallback:
+                r = _engine._group_by_aggregate(gc, kc, op)
+                vals[name] = r.values[0]
+        return vals
+
+    values = jax.vmap(row)(runs.groups, runs.run_keys, runs.run_valid)
+    valid = jnp.arange(spec.capacity) < runs.num_groups
+    values = {name: jnp.where(valid, v, jnp.zeros((), v.dtype))
+              for name, v in values.items()}
+    return runs.groups, values, valid, runs.num_groups

@@ -108,14 +108,24 @@ def stream_push(groups: Array, keys: Array, carries, combiners, *,
 
 class StreamingAggregator:
     """Stateful wrapper over a planned streaming Query; one jit-compiled
-    fused engine pass per ``push``."""
+    fused engine pass per ``push``.
 
-    def __init__(self, op="sum", *, key_dtype=jnp.int32, p_ports: int = 4):
+    With ``window=repro.query.Window(...)`` the carry threaded between
+    pushes *is* a pane store (:mod:`repro.core.panestore`): each ``push``
+    ingests the batch and emits one per-group-window evaluation — the
+    paper's SWAG-with-groups approximation as a streaming surface
+    (``ws_per_group`` per-group sizes, or ``ws`` as every group's default).
+    """
+
+    def __init__(self, op="sum", *, window=None, key_dtype=jnp.int32,
+                 p_ports: int = 4):
         from repro import query as _q
         self.combiner = op if isinstance(op, Combiner) else get_combiner(op)
-        self.plan = _q.plan(_q.Query(ops=(self.combiner,), streaming=True),
-                            backend="reference")
-        self.carry = segscan.init_carry(self.combiner, key_dtype)
+        self.window = window
+        self.plan = _q.plan(
+            _q.Query(ops=(self.combiner,), window=window, streaming=True),
+            backend="reference")
+        self.carry = _q.init_stream_state(self.plan, key_dtype)
         self.p_ports = p_ports
         self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports))
 
@@ -123,20 +133,34 @@ class StreamingAggregator:
              n_valid: Array | None = None) -> StreamResult:
         groups = jnp.asarray(groups, jnp.int32)
         keys = jnp.asarray(keys)
-        (g, values, valid, num, rr), (self.carry,) = self._step(
-            groups, keys, (self.carry,), n_valid)
+        (g, values, valid, num, rr), self.carry = self._step(
+            groups, keys, self.carry, n_valid)
         return StreamResult(g, values[self.combiner.name], valid, num, rr)
 
     def flush(self) -> StreamResult:
-        """Close the stream: emit the open group, reset the carry."""
-        c = self.carry
+        """Close the stream: emit the open group (windowed: re-emit every
+        live group's current window), reset the carry."""
+        from repro import query as _q
+        if self.window is not None:
+            from repro.core import panestore as _ps
+            spec = self.window.store_spec()
+            g, values, valid, num = _ps.replay(
+                spec, self.carry, (self.combiner,))
+            rr = jnp.where(valid, jnp.arange(spec.capacity) % self.p_ports,
+                           -1)
+            self.carry = _q.init_stream_state(self.plan,
+                                              self.carry.keys.dtype)
+            return StreamResult(g, values[self.combiner.name], valid, num,
+                                rr)
+        (c,) = self.carry
         value = self.combiner.finalize(jax.tree.map(jnp.asarray, c.state))
         groups = jnp.where(c.nonempty, c.group, _engine.PAD_GROUP)[None]
         values = jnp.where(c.nonempty, value, jnp.zeros((), value.dtype))[None]
         valid = c.nonempty[None]
         num = c.nonempty.astype(jnp.int32)
         rr = jnp.where(valid, c.emitted % self.p_ports, -1)
-        self.carry = segscan.init_carry(self.combiner,
-                                        jax.tree.leaves(c.state)[0].dtype
-                                        if jax.tree.leaves(c.state) else jnp.int32)
+        self.carry = (segscan.init_carry(
+            self.combiner,
+            jax.tree.leaves(c.state)[0].dtype
+            if jax.tree.leaves(c.state) else jnp.int32),)
         return StreamResult(groups, values, valid, num, rr)

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as _engine
+from repro.core import panestore as _panestore
 from repro.core import segscan, sorter
 from repro.core.combiners import Combiner, get_combiner
 
@@ -280,16 +281,22 @@ class MedianResult(NamedTuple):
     num_groups: Array  # [num_windows]
 
 
-def _median_sorted_window(g: Array, k: Array, *, interpolate: bool
-                          ) -> MedianResult:
+def _median_sorted_window(g: Array, k: Array, *, interpolate: bool,
+                          n_valid: Array | None = None) -> MedianResult:
     """Median per group of one closed, (group, key)-sorted window.
 
     The sorter output is consumed *with* group cardinalities (paper: "append
     the median-related information such as group cardinality alongside the
     data"): counts + group start offsets come from one engine pass and the
     middle element(s) of each group's sorted run are picked out.
+
+    Also serves grouped median *without* a window (``n_valid`` marks the
+    real prefix; the padding tail forms its own never-emitted segment).
     """
-    counts = _engine._group_by_aggregate(g, k, "count")
+    counts = _engine._group_by_aggregate(g, k, "count", n_valid=n_valid)
+    if n_valid is not None:
+        g = jnp.where(jnp.arange(g.shape[0]) < n_valid, g,
+                      _engine.PAD_GROUP)
     n = g.shape[0]
     starts = segscan.segment_starts(g)
     seg_id = jnp.cumsum(starts.astype(jnp.int32)) - 1
@@ -350,6 +357,48 @@ def swag_median(groups: Array, keys: Array, *, ws: int, wa: int,
                         use_xla_sort=use_xla_sort)
     return MedianResult(res.groups, res.values["median"], res.valid,
                         res.num_groups)
+
+
+def per_group_chunk_scan(spec, state, groups: Array, keys: Array, emit):
+    """Thread a pane store over WA-sized stream chunks: push each chunk,
+    then apply ``emit`` to the updated store (one evaluation per chunk).
+    The trailing remainder (< WA tuples) stays unpushed — mirror of
+    :func:`frame_panes`.  Returns ``(final_state, stacked emissions)``."""
+    ne = groups.shape[-1] // spec.wa
+    gc = frame_panes(groups.astype(jnp.int32), spec.wa, ne)
+    kc = frame_panes(keys, spec.wa, ne)
+
+    def step(st, x):
+        g, k = x
+        st = _panestore.push(spec, st, g, k)
+        return st, emit(st)
+
+    return jax.lax.scan(step, state, (gc, kc))
+
+
+def swag_per_group(groups: Array, keys: Array, *, spec, ops,
+                   interpolate: bool = False, state=None):
+    """Per-group-window SWAG on the shared pane store (the paper's
+    approximation for SWAG with per-group windows) — batch entry.
+
+    The stream is cut into ``spec.wa``-sized chunks; after each chunk one
+    **evaluation** replays every live group's last ``WS_g`` own tuples from
+    the store (``spec`` is a :class:`repro.core.panestore.PaneStoreSpec`).
+    Unlike the global-window paths, the window of group ``g`` counts only
+    ``g``'s tuples — there is no single stream-level WS, so evaluations
+    start with the first chunk.
+
+    Returns ``((groups, values, valid, num_groups), final_state)`` with a
+    leading ``[num_evals = N // WA]`` axis and ``spec.capacity`` output
+    slots per evaluation; ``state=None`` starts a fresh store (pass the
+    previous state to continue a stream).
+    """
+    if state is None:
+        state = _panestore.init_store(spec, jnp.asarray(keys).dtype)
+    state, out = per_group_chunk_scan(
+        spec, state, groups, keys,
+        lambda st: _panestore.replay(spec, st, ops, interpolate=interpolate))
+    return out, state
 
 
 def swag_multi(groups: Array, keys: Array, *, ws: int, wa: int,

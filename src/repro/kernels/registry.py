@@ -10,6 +10,9 @@ per-file ``_is_cpu()`` / ``interpret`` heuristics that used to live in each
                         scratch (group-by via the tiled groupagg kernel)
   * ``pallas-panes``  — fused Pallas pane kernels: WA-panes sorted once,
                         windows assembled by the bitonic merge network
+  * ``pallas-panestore`` — per-group windows (``Window(ws_per_group=...)``):
+                        pane gather + in-VMEM merge + one shared butterfly
+                        compaction per replay row (store bookkeeping in XLA)
   * ``auto``          — capability-probed choice (platform + query shape)
 
 Selection precedence: explicit ``backend=`` argument > the ``REPRO_BACKEND``
@@ -29,6 +32,7 @@ import dataclasses
 import os
 from typing import Callable
 
+from repro.core.panestore import DIRECT_OPS
 from repro.core.swag import pane_compatible
 from repro.kernels import common
 
@@ -56,7 +60,10 @@ def _ref_supports(q) -> str | None:
 
 
 def _pallas_window_common(q) -> str | None:
-    """Window-clause checks shared by both kernel backends."""
+    """Window-clause checks shared by both global-window kernel backends."""
+    if q.window.per_group:
+        return ("per-group windows replay from the shared pane store — "
+                "use the pallas-panestore backend")
     if q.window.ws & (q.window.ws - 1):
         return f"pallas window kernels need power-of-two WS, got {q.window.ws}"
     if q.presorted:
@@ -83,8 +90,8 @@ def _pallas_supports(q) -> str | None:
         if any(op in ("argmin", "argmax") for op in q.ops):
             return ("position-carrying operators lift a global iota; the "
                     "tiled kernel lifts per tile")
-        if "median" in q.ops:
-            return "non-windowed median needs the reference sort pipeline"
+        if "median" in q.ops and q.interpolate:
+            return "pallas median is lower-median only (interpolate=False)"
     return None
 
 
@@ -105,6 +112,22 @@ def _pallas_panes_supports(q) -> str | None:
     return None
 
 
+def _pallas_panestore_supports(q) -> str | None:
+    if q.window is None or not q.window.per_group:
+        return ("the pane-store kernel serves per-group windows "
+                "(Window(ws_per_group=...)) only")
+    if q.streaming:
+        return "streaming pane-store carries are a reference-backend feature"
+    if q.interpolate:
+        return "pallas median is lower-median only (interpolate=False)"
+    bad = sorted(op for op in q.op_names if op not in DIRECT_OPS)
+    if bad:
+        return (f"the pane-store kernel computes {sorted(DIRECT_OPS)} "
+                f"directly from the merged window; {bad} need the "
+                f"reference backend's engine-tail fallback")
+    return None
+
+
 _BACKENDS: dict[str, Backend] = {}
 
 
@@ -116,6 +139,8 @@ def register_backend(backend: Backend) -> None:
 register_backend(Backend("reference", _ref_supports))
 register_backend(Backend("pallas", _pallas_supports, uses_kernels=True))
 register_backend(Backend("pallas-panes", _pallas_panes_supports,
+                         uses_kernels=True))
+register_backend(Backend("pallas-panestore", _pallas_panestore_supports,
                          uses_kernels=True))
 
 
@@ -130,6 +155,15 @@ def get_backend(name: str) -> Backend:
         raise ValueError(
             f"unknown backend {name!r}; have {sorted(available_backends())}"
         ) from None
+
+
+def unsupported_error(name: str, reason: str) -> ValueError:
+    """The error raised when an explicitly requested backend rejects a
+    query: names the probe's reason *and* lists the alternatives (never a
+    silent fallback — the caller picks, the registry informs)."""
+    return ValueError(
+        f"backend {name!r} cannot run this query: {reason} "
+        f"[available backends: {', '.join(sorted(available_backends()))}]")
 
 
 def resolve_backend(explicit: str | None = None) -> str:
@@ -154,7 +188,7 @@ def choose_backend(query) -> str:
     """
     if common.is_cpu():
         return "reference"
-    for name in ("pallas-panes", "pallas"):
+    for name in ("pallas-panestore", "pallas-panes", "pallas"):
         if get_backend(name).supports(query) is None:
             return name
     return "reference"

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import panestore as _panestore
 from repro.core.combiners import get_combiner
 from repro.core.engine import PAD_GROUP
 from repro.kernels import common
@@ -205,6 +206,68 @@ def swag_pallas_panes(panes_g, panes_k, ops, *, p: int, interpret: bool):
         interpret=interpret,
     )(*([panes_g] * p + [panes_k] * p))
     return og, dict(zip(combiners, ovs)), oc[:, 0]
+
+
+def _pergroup_kernel(k_ref, v_ref, *ov_refs, names, run):
+    """One replay row of the per-group pane store, entirely in VMEM:
+
+        presorted runs  ->  bitonic merge (by key, liveness as payload)
+                        ->  ONE shared butterfly compaction
+                        ->  N operator tails off the compacted window
+
+    All lanes of a row belong to one group (panes are per-group), so no
+    group column rides through the merge — the liveness mask (slot
+    occupancy + open-pane fill + staleness, folded upstream by
+    ``panestore.gather_runs``) is the only metadata.  Every requested op
+    reads the same compacted, key-sorted live prefix: the multi-op sharing
+    of the global-window kernels, with the compaction network doing the
+    work the PRRA's reverse butterfly does in hardware.
+    """
+    k = k_ref[0, :]
+    vi = v_ref[0, :]
+    k, vi = common.bitonic_merge_tile((k, vi), num_keys=1, run=run)
+    sentinel = _panestore._key_sentinel(k.dtype)
+    (ck,), cnt = common.butterfly_compact(vi != 0, (k,), (sentinel,))
+    vals = _panestore._direct_tails(ck, cnt[0], names, key_dtype=k.dtype,
+                                    interpolate=False)
+    for name, ov_ref in zip(names, ov_refs):
+        ov_ref[0, 0] = vals[name]
+
+
+def _pergroup_out_dtype(name: str, key_dtype):
+    return jax.eval_shape(
+        lambda k, c: _panestore._direct_tails(
+            k, c, (name,), key_dtype=key_dtype, interpolate=False)[name],
+        jax.ShapeDtypeStruct((8,), key_dtype),
+        jax.ShapeDtypeStruct((), jnp.int32)).dtype
+
+
+def pergroup_replay_pallas(run_keys, run_valid, ops, *, run: int,
+                           interpret: bool):
+    """Replay pass over gathered per-group pane subsets.
+
+    ``run_keys`` / ``run_valid``: [R, S*WA] — R rows (one per candidate
+    group per evaluation), each a concatenation of S key-sorted WA-runs
+    with a liveness mask (see :class:`repro.core.panestore.ReplayRuns`).
+    ``ops`` is one op name or a tuple of :data:`repro.core.panestore.
+    DIRECT_OPS` names.  Returns ``{name: [R] values}``.
+    """
+    r, L = run_keys.shape
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
+    kern = functools.partial(_pergroup_kernel, names=names, run=run)
+    block = pl.BlockSpec((1, L), lambda i: (i, 0))
+    out_block = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kern,
+        grid=(r,),
+        in_specs=[block, block],
+        out_specs=[out_block] * len(names),
+        out_shape=[jax.ShapeDtypeStruct(
+            (r, 1), _pergroup_out_dtype(name, run_keys.dtype))
+            for name in names],
+        interpret=interpret,
+    )(run_keys, run_valid)
+    return {name: o[:, 0] for name, o in zip(names, outs)}
 
 
 def swag_pallas(frames_g, frames_k, ops, *, interpret: bool):

@@ -85,6 +85,78 @@ def _swag_kernel_exec(groups, keys, *, ws: int, wa: int, ops,
     return og, ovs, valid, oc
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "ops", "interpret"))
+def _swag_pergroup_kernel_exec(groups, keys, *, spec, ops,
+                               interpret: bool | None = None):
+    """Per-group-window SWAG with the replay offloaded to the Pallas
+    kernel: the store push + pane gather run in XLA (bookkeeping), and one
+    ``pallas_call`` (grid over evaluation x group rows) does the merge +
+    shared butterfly compaction + N operator tails in VMEM.
+
+    ``spec`` is a static :class:`repro.core.panestore.PaneStoreSpec`;
+    ``ops`` a tuple of DIRECT_OPS names.  Returns
+    ``(og [NE, C], {name: ov}, valid [NE, C], num_groups [NE])``.
+    """
+    from repro.core import panestore as _ps
+    from repro.core.swag import per_group_chunk_scan
+    from repro.kernels.swag import kernel as _k
+
+    interpret = _common.default_interpret(interpret)
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
+    state = _ps.init_store(spec, keys.dtype)
+    state, runs = per_group_chunk_scan(
+        spec, state, groups, keys, lambda st: _ps.gather_runs(spec, st))
+
+    ne, c = runs.groups.shape
+    if ne == 0:
+        return (jnp.full((0, c), PAD_GROUP, jnp.int32),
+                {name: jnp.zeros((0, c), _k._pergroup_out_dtype(
+                    name, keys.dtype)) for name in names},
+                jnp.zeros((0, c), bool), jnp.zeros((0,), jnp.int32))
+
+    length = runs.run_keys.shape[-1]
+    ovs = _k.pergroup_replay_pallas(
+        runs.run_keys.reshape(ne * c, length),
+        runs.run_valid.reshape(ne * c, length).astype(jnp.int32),
+        names, run=spec.wa, interpret=interpret)
+    valid = jnp.arange(c)[None, :] < runs.num_groups[:, None]
+    values = {name: jnp.where(valid, v.reshape(ne, c),
+                              jnp.zeros((), v.dtype))
+              for name, v in ovs.items()}
+    og = jnp.where(valid, runs.groups, PAD_GROUP)
+    return og, values, valid, runs.num_groups
+
+
+@functools.partial(jax.jit, static_argnames=("ops", "interpret"))
+def _engine_median_kernel_exec(groups, keys, ops,
+                               *, n_valid=None,
+                               interpret: bool | None = None):
+    """Grouped median (plus any riding ops) without a window, on Pallas:
+    the stream is one pow2-padded frame of the fused SWAG kernel — median
+    needs whole groups in one tile, which the tiled groupagg kernel's
+    per-tile carry stitching cannot provide."""
+    from repro.core.sorter import next_pow2
+    from repro.kernels.swag import kernel as _k
+
+    interpret = _common.default_interpret(interpret)
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
+    n = groups.shape[-1]
+    groups = groups.astype(jnp.int32)
+    if n_valid is not None:
+        groups = jnp.where(jnp.arange(n) < n_valid, groups, PAD_GROUP)
+    m = next_pow2(n)
+    if m != n:
+        groups = jnp.concatenate(
+            [groups, jnp.full((m - n,), PAD_GROUP, jnp.int32)])
+        keys = jnp.concatenate([keys, jnp.zeros((m - n,), keys.dtype)])
+    og, ovs, oc = _k.swag_pallas(groups[None, :], keys[None, :], names,
+                                 interpret=interpret)
+    num = oc[0]
+    valid = jnp.arange(n) < num
+    og = jnp.where(valid, og[0, :n], PAD_GROUP)
+    return og, {name: v[0, :n] for name, v in ovs.items()}, valid, num
+
+
 def swag_tpu(groups, keys, *, ws: int, wa: int, op="sum",
              interpret: bool | None = None,
              panes: bool | None = None) -> SwagResult:

@@ -16,8 +16,13 @@ declare *what* they want:
 
 and the planner lowers it onto a backend from
 :mod:`repro.kernels.registry` (``reference`` | ``pallas`` |
-``pallas-panes`` | ``auto``; overridable per call or via the
-``REPRO_BACKEND`` environment variable).
+``pallas-panes`` | ``pallas-panestore`` | ``auto``; overridable per call
+or via the ``REPRO_BACKEND`` environment variable).
+
+Per-group windows (the paper's approximation for SWAG with per-group
+window sizes) are ``Window(ws_per_group=...)`` — served from the shared,
+evicting pane store of :mod:`repro.core.panestore`; streaming windowed
+queries thread that store as their carry.
 
 Multi-op queries are **fused**: the sort / pane framing / segment marking /
 compaction permutation run once and every requested combiner rides the same
@@ -27,8 +32,9 @@ result tuples; all value columns share one ``groups``/``valid`` layout.
 
 Contracts (unchanged from the paper): non-windowed queries require the
 input sorted by group id (ties contiguous; an upstream sorter provides
-this); ``distinct_count`` additionally requires keys sorted within groups —
-windowed queries sort internally, so both hold for free there.
+this); ``distinct_count`` and ``median`` additionally require keys sorted
+within groups (the rank pick / dedup read runs in place) — windowed
+queries sort internally, so all of these hold for free there.
 """
 from __future__ import annotations
 
@@ -39,8 +45,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as _engine
+from repro.core import panestore as _panestore
 from repro.core import streaming as _streaming
-from repro.core.swag import _swag, _swag_median, swag_multi
+from repro.core.swag import (_median_sorted_window, _swag, _swag_median,
+                             swag_multi, swag_per_group)
 from repro.core.combiners import Combiner, get_combiner
 from repro.kernels import registry as _registry
 
@@ -72,14 +80,24 @@ class Window:
     forces / ``False`` suppresses); the kernel backends encode the choice in
     the backend name (``pallas`` re-sorts, ``pallas-panes`` shares panes).
 
-    ``ws_per_group`` is reserved for the paper's per-group-window
-    approximation (ROADMAP): a mapping of group id -> window size served
-    from the shared pane store.  Specifying it raises until that lands.
+    ``ws_per_group`` selects the paper's **per-group-window approximation**
+    (the last ``WS_g`` tuples *of each group*, served from the shared
+    evicting pane store — :mod:`repro.core.panestore`).  It is either a
+    mapping ``{group id: ws}`` (groups not listed default to ``ws``) or a
+    single int (one per-group window size for every group).  ``wa`` then
+    doubles as the pane width (power of two) and the evaluation stride:
+    one result row set per ``wa`` stream tuples.  ``capacity`` bounds the
+    shared store in pane slots (``None``: a heuristic with room for every
+    listed group plus a few defaults); when live groups need more, the
+    globally oldest pane is evicted and the victim group's effective
+    window shrinks — the approximation the paper trades for hash-free,
+    DRAM-free state.
     """
     ws: int
     wa: int | None = None
     panes: bool | None = None
     ws_per_group: Any = None
+    capacity: int | None = None
 
     def __post_init__(self):
         if self.ws <= 0:
@@ -88,6 +106,40 @@ class Window:
         if wa <= 0:
             raise ValueError(f"wa must be positive, got {wa}")
         object.__setattr__(self, "wa", wa)
+        wpg = self.ws_per_group
+        if wpg is not None and not isinstance(wpg, int):
+            if isinstance(wpg, tuple):
+                pairs = wpg
+            else:
+                try:
+                    pairs = tuple(wpg.items())
+                except AttributeError:
+                    raise TypeError(
+                        "ws_per_group must be a mapping {group id: ws}, an "
+                        "int (uniform per-group window), or None; got "
+                        f"{wpg!r}") from None
+            wpg = tuple(sorted((int(g), int(w)) for g, w in pairs))
+            object.__setattr__(self, "ws_per_group", wpg)
+        if self.capacity is not None and self.capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {self.capacity}")
+
+    @property
+    def per_group(self) -> bool:
+        return self.ws_per_group is not None
+
+    def store_spec(self) -> "_panestore.PaneStoreSpec":
+        """The pane-store configuration this window clause implies (also
+        used for streaming *global*-window queries, where ``ws`` acts as
+        every group's default per-group window — the paper's streaming
+        design point)."""
+        wpg = self.ws_per_group
+        pairs = wpg if isinstance(wpg, tuple) else ()
+        default = wpg if isinstance(wpg, int) else self.ws
+        cap = self.capacity
+        if cap is None:
+            cap = _panestore.default_capacity(self.wa, default, pairs)
+        return _panestore.PaneStoreSpec(wa=self.wa, capacity=cap,
+                                        default_ws=default, per_group=pairs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +148,8 @@ class Query:
 
     Fields:
       ops: one combiner name / :class:`Combiner`, or a tuple of them; the
-        non-incremental ``"median"`` is a valid op (windowed queries only).
+        non-incremental ``"median"`` is a valid op (non-windowed queries
+        additionally need keys sorted within groups, like ``"dc"``).
         Aliases from :data:`OP_ALIASES` are normalised (``"dc"`` ->
         ``"distinct_count"``).
       group_by: when False the whole stream is one group (``groups`` may be
@@ -176,23 +229,29 @@ def plan(query: Query, *, backend: str | None = None) -> Plan:
     (capability probe: reference on CPU, fused kernels on accelerators).
     Raises ``ValueError`` when an explicitly requested backend cannot run
     the query (never a silent fallback).
+
+    Streaming windowed queries run on the per-group pane store: with a
+    plain ``Window(ws)`` the window counts each group's *own* last ``ws``
+    tuples (the paper's approximation — different numbers than the same
+    window executed batch-at-a-time, which frames the raw stream); the
+    plan's ``note`` records the reinterpretation.
     """
     if not isinstance(query, Query):
         raise TypeError(f"expected a Query, got {type(query).__name__}")
-    if query.window is not None and query.window.ws_per_group is not None:
-        raise NotImplementedError(
-            "Window(ws_per_group=...) is the spec slot for the paper's "
-            "per-group-window approximation — see ROADMAP.md (per-group "
-            "pane index over the shared pane store); not implemented yet")
-    if query.streaming and query.window is not None:
-        raise NotImplementedError(
-            "streaming windowed queries need the per-group pane store "
-            "(ROADMAP); run windowed queries batch-at-a-time for now")
+    if query.window is not None and (query.window.per_group
+                                     or query.streaming):
+        # both the per-group batch path and every streaming windowed query
+        # run on the shared pane store (streaming global windows are the
+        # paper's approximation: ws becomes each group's default window)
+        if query.presorted:
+            raise ValueError("presorted is meaningless with the pane "
+                             "store — it frames and sorts panes itself")
+        if query.window.panes is False:
+            raise ValueError("Window(panes=False) conflicts with "
+                             "ws_per_group / streaming windows: the pane "
+                             "store *is* the pane path")
+        query.window.store_spec()  # validate wa/capacity/ws_per_group now
     names = query.op_names
-    if "median" in names and query.window is None:
-        raise NotImplementedError(
-            "median is windowed-only (the sort-based SWAG pipeline "
-            "provides the group cardinalities it needs)")
     if query.interpolate and "median" not in names:
         raise ValueError("interpolate=True applies to the median op only")
     if query.n_valid is not None and query.window is not None:
@@ -209,11 +268,18 @@ def plan(query: Query, *, backend: str | None = None) -> Plan:
         note = "auto"
     reason = _registry.get_backend(name).supports(query)
     if reason is not None:
-        raise ValueError(f"backend {name!r} cannot run this query: {reason}")
+        raise _registry.unsupported_error(name, reason)
 
     path = ("stream" if query.streaming
             else "window" if query.window is not None
             else "engine")
+    if path == "stream" and query.window is not None \
+            and not query.window.per_group:
+        # NOT the batch semantics: a streamed global window runs on the
+        # pane store, where ws becomes each group's default per-group
+        # window (the paper's approximation) — flag it on the plan
+        note = (note + "; " if note else "") + \
+            "stream-window: ws serves as each group's per-group window"
     return Plan(query=query, backend=name, path=path, note=note)
 
 
@@ -242,11 +308,30 @@ def _prepare_inputs(query: Query, groups, keys, n_valid):
 
 def stream_fn(p: Plan, *, p_ports: int = 4):
     """Return the raw streaming step of a planned streaming query:
-    ``(groups, keys, carries, n_valid) -> ((groups, values, valid, num, rr),
-    carries)`` — jit-friendly (close over the static plan)."""
+    ``(groups, keys, state, n_valid) -> ((groups, values, valid, num, rr),
+    state)`` — jit-friendly (close over the static plan).
+
+    Non-windowed streams thread per-op :class:`segscan.Carry` tuples;
+    windowed streams thread a :class:`repro.core.panestore.PaneStoreState`
+    (push the batch, then emit one per-group evaluation)."""
     if p.path != "stream":
         raise ValueError("stream_fn needs a streaming plan")
-    combiners = _combiners(p.query)
+    q = p.query
+
+    if q.window is not None:
+        spec = q.window.store_spec()
+
+        def store_step(groups, keys, state, n_valid=None):
+            state = _panestore.push(spec, state, groups, keys,
+                                    n_valid=n_valid)
+            g, values, valid, num = _panestore.replay(
+                spec, state, q.ops, interpolate=q.interpolate)
+            rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
+            return (g, values, valid, num, rr), state
+
+        return store_step
+
+    combiners = _combiners(q)
 
     def step(groups, keys, carries, n_valid=None):
         return _streaming.stream_push(groups, keys, carries, combiners,
@@ -256,35 +341,74 @@ def stream_fn(p: Plan, *, p_ports: int = 4):
 
 
 def init_stream_state(p: Plan, key_dtype=jnp.int32):
-    """Fresh per-op carries for a streaming plan."""
+    """Fresh state for a streaming plan: per-op carries, or a pane store
+    when the query is windowed."""
     from repro.core import segscan
+    if p.query.window is not None:
+        return _panestore.init_store(p.query.window.store_spec(), key_dtype)
     return tuple(segscan.init_carry(c, key_dtype)
                  for c in _combiners(p.query))
 
 
 def _execute_engine(p: Plan, groups, keys, n_valid, *, tile, interpret):
     q = p.query
+    names = q.op_names
     if p.backend == "pallas":
+        if "median" in names:
+            # median needs whole groups in one tile: run the fused one-frame
+            # swag kernel over the pow2-padded stream (all ops ride along)
+            from repro.kernels.swag.ops import _engine_median_kernel_exec
+            og, ovs, valid, num = _engine_median_kernel_exec(
+                groups, keys, names, n_valid=n_valid, interpret=interpret)
+            return AggResult(og, ovs, valid, num)
         from repro.kernels.groupagg.ops import _groupagg_kernel_exec
         values = {}
         shared = None
         # the tiled groupagg kernel is single-op (per-tile carry stitching);
         # multi-op fusion is the reference path's job — see swag for the
         # windowed fused kernels
-        for op, name in zip(q.ops, q.op_names):
+        for op, name in zip(q.ops, names):
             r = _groupagg_kernel_exec(groups, keys, op, n_valid=n_valid,
                                       tile=tile, interpret=interpret)
             values[name] = r.values
             shared = shared or (r.groups, r.valid, r.num_groups)
         return AggResult(shared[0], values, shared[1], shared[2])
-    (g, values, valid, num), _ = _engine.multi_engine_step(
-        groups, keys, q.ops, n_valid=n_valid)
-    return AggResult(g, values, valid, num)
+
+    non_median = tuple(op for op, nm in zip(q.ops, names) if nm != "median")
+    values = {}
+    shared = None
+    if non_median:
+        (g, vals, valid, num), _ = _engine.multi_engine_step(
+            groups, keys, non_median, n_valid=n_valid)
+        values.update(vals)
+        shared = (g, valid, num)
+    if "median" in names:
+        # grouped median without a window: the engine pass provides segment
+        # offsets + cardinalities over the (group, key)-sorted stream, and
+        # the rank pick reads the middle element(s) in place (same
+        # sorted-within-groups contract as distinct_count)
+        t = _median_sorted_window(groups, keys, interpolate=q.interpolate,
+                                  n_valid=n_valid)
+        values["median"] = t.medians
+        shared = shared or (t.groups, t.valid, t.num_groups)
+    return AggResult(shared[0], values, shared[1], shared[2])
 
 
 def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
     q = p.query
     w = q.window
+    if w.per_group:
+        spec = w.store_spec()
+        if p.backend == "pallas-panestore":
+            from repro.kernels.swag.ops import _swag_pergroup_kernel_exec
+            og, ovs, valid, num = _swag_pergroup_kernel_exec(
+                groups, keys, spec=spec, ops=q.op_names,
+                interpret=interpret)
+            return AggResult(og, ovs, valid, num)
+        (og, values, valid, num), _ = swag_per_group(
+            groups, keys, spec=spec, ops=q.ops, interpolate=q.interpolate)
+        return AggResult(og, values, valid, num)
+
     if p.backend in ("pallas", "pallas-panes"):
         from repro.kernels.swag.ops import _swag_kernel_exec
         panes = True if p.backend == "pallas-panes" else False

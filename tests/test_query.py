@@ -24,6 +24,15 @@ ACCEPT_OPS = ("sum", "min", "dc")
 ACCEPT_WS, ACCEPT_WA = 1024, 256
 
 
+@pytest.fixture
+def no_env_backend(monkeypatch):
+    """Pin the default-backend behaviour under test: the CI backend-matrix
+    leg exports REPRO_BACKEND, which must not leak into tests that assert
+    auto/reference semantics (streaming, interpolate) rather than exercise
+    the capability probes."""
+    monkeypatch.delenv(registry.BACKEND_ENV, raising=False)
+
+
 def _stream(rng, n=2048, n_groups=16):
     g = rng.integers(0, n_groups, n).astype(np.int32)
     k = rng.integers(0, 1000, n).astype(np.int32)
@@ -173,7 +182,7 @@ def test_n_valid(rng):
 # windowed median / interpolate
 # ---------------------------------------------------------------------------
 
-def test_median_rides_along(rng):
+def test_median_rides_along(rng, no_env_backend):
     g, k = _stream(rng, n=512, n_groups=5)
     q = Query(ops=("median", "count"), window=Window(ws=64, wa=32),
               interpolate=True)
@@ -186,11 +195,81 @@ def test_median_rides_along(rng):
                           np.array(res.values["median"])[valid])
 
 
+def test_nonwindowed_median_matches_oracle(rng):
+    """Grouped median without a window: the engine pass hands the rank pick
+    its segment offsets (input sorted by (group, key), like dc)."""
+    g, k = sorted_stream(rng, 256, 9, full_sort=True)
+    res, _ = execute(Query(ops=("median", "count")), jnp.array(g),
+                     jnp.array(k), backend="reference")
+    og, ov = py_group_aggregate(g, k, PY_OPS["median"])
+    n = int(res.num_groups)
+    assert n == len(og)
+    np.testing.assert_array_equal(np.array(res.groups[:n]), og)
+    np.testing.assert_array_equal(np.array(res.values["median"][:n]), ov)
+    _, oc = py_group_aggregate(g, k, PY_OPS["count"])
+    np.testing.assert_array_equal(np.array(res.values["count"][:n]), oc)
+
+
+def test_nonwindowed_median_pallas_parity(rng):
+    """The pallas backend serves non-windowed median via one pow2-padded
+    frame of the fused SWAG kernel — element-exact vs reference."""
+    g, k = sorted_stream(rng, 200, 7, full_sort=True)  # non-pow2 length
+    q = Query(ops=("median", "sum"))
+    ref, _ = execute(q, jnp.array(g), jnp.array(k), backend="reference")
+    pal, _ = execute(q, jnp.array(g), jnp.array(k), backend="pallas")
+    n = int(ref.num_groups)
+    assert n == int(pal.num_groups)
+    np.testing.assert_array_equal(np.array(ref.groups), np.array(pal.groups))
+    for op in ("median", "sum"):
+        np.testing.assert_array_equal(np.array(ref.values[op][:n]),
+                                      np.array(pal.values[op][:n]))
+
+
+def test_nonwindowed_median_interpolate_and_n_valid(rng):
+    g, k = sorted_stream(rng, 128, 5, full_sort=True)
+    full, _ = execute(Query(ops=("median",), interpolate=True),
+                      jnp.array(g[:100]), jnp.array(k[:100]),
+                      backend="reference")
+    pad, _ = execute(Query(ops=("median",), interpolate=True),
+                     jnp.array(g), jnp.array(k), n_valid=jnp.asarray(100),
+                     backend="reference")
+    n = int(full.num_groups)
+    assert n == int(pad.num_groups)
+    np.testing.assert_array_equal(np.array(full.values["median"][:n]),
+                                  np.array(pad.values["median"][:n]))
+    lo = [sorted(v)[(len(v) - 1) // 2] for v
+          in (np.sort(k[:100][g[:100] == gi]) for gi in np.unique(g[:100]))
+          if len(v)]
+    hi = [sorted(v)[len(v) // 2] for v
+          in (np.sort(k[:100][g[:100] == gi]) for gi in np.unique(g[:100]))
+          if len(v)]
+    want = (np.array(lo, np.float32) + np.array(hi, np.float32)) / 2
+    np.testing.assert_array_equal(np.array(full.values["median"][:n]), want)
+
+
+# ---------------------------------------------------------------------------
+# per-group windows (the pane-store subsystem; details in test_panestore)
+# ---------------------------------------------------------------------------
+
+def test_pergroup_env_dispatch(monkeypatch):
+    monkeypatch.setenv(registry.BACKEND_ENV, "pallas-panestore")
+    p = plan(Query(("sum",), window=Window(ws=16, wa=4,
+                                           ws_per_group={0: 8})))
+    assert p.backend == "pallas-panestore"
+    assert p.path == "window"
+
+
+def test_streaming_windowed_plan(no_env_backend):
+    p = plan(Query(("sum",), window=Window(ws=16, wa=4), streaming=True))
+    assert p.path == "stream"
+    assert p.backend == "reference"
+
+
 # ---------------------------------------------------------------------------
 # streaming
 # ---------------------------------------------------------------------------
 
-def test_streaming_query_matches_aggregator(rng):
+def test_streaming_query_matches_aggregator(rng, no_env_backend):
     g, k = sorted_stream(rng, 128, 13)
     agg = StreamingAggregator("sum")
     q = Query(ops=("sum",), streaming=True)
@@ -207,7 +286,7 @@ def test_streaming_query_matches_aggregator(rng):
                                       np.array(got.values["sum"]))
 
 
-def test_streaming_multi_op(rng):
+def test_streaming_multi_op(rng, no_env_backend):
     g, k = sorted_stream(rng, 96, 7)
     q = Query(ops=("sum", "count"), streaming=True)
     state = None
@@ -230,7 +309,7 @@ def test_streaming_multi_op(rng):
         assert got_cnt[gi] == ci
 
 
-def test_make_query_step_streaming(rng):
+def test_make_query_step_streaming(rng, no_env_backend):
     from repro.distributed.steps import make_query_step
     from repro.query import init_stream_state
     g, k = sorted_stream(rng, 64, 5)
@@ -281,7 +360,7 @@ def test_plan_is_reusable_and_hashable(rng):
                                   np.array(b.values["sum"]))
 
 
-def test_auto_backend_on_cpu_is_reference():
+def test_auto_backend_on_cpu_is_reference(no_env_backend):
     assert plan(Query(ops=("sum",))).backend == "reference"
 
 
@@ -296,11 +375,6 @@ def test_query_spec_errors(bad_query, exc):
 
 
 @pytest.mark.parametrize("query,backend,exc", [
-    (dict(ops=("median",)), None, NotImplementedError),          # no window
-    (dict(ops=("sum",), window=Window(ws=16), streaming=True), None,
-     NotImplementedError),                                       # stream+win
-    (dict(ops=("sum",), window=Window(ws=16, ws_per_group={0: 8})), None,
-     NotImplementedError),                                       # per-group
     (dict(ops=("sum",), interpolate=True), None, ValueError),    # no median
     (dict(ops=("sum",), window=Window(ws=16), n_valid=8), None,
      ValueError),                                                # n_valid+win
@@ -313,6 +387,12 @@ def test_query_spec_errors(bad_query, exc):
      ValueError),
     (dict(ops=("sum",), window=Window(ws=64, wa=16, panes=False)),
      "pallas-panes", ValueError),
+    # per-group windows belong to the pane store, not the global-window
+    # kernels; the pane-store kernel serves per-group windows only
+    (dict(ops=("sum",), window=Window(ws=16, wa=4, ws_per_group={0: 8})),
+     "pallas", ValueError),
+    (dict(ops=("sum",), window=Window(ws=16, wa=4)), "pallas-panestore",
+     ValueError),
 ])
 def test_plan_errors(query, backend, exc):
     with pytest.raises(exc):
