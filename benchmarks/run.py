@@ -9,13 +9,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          shared pane store, num_groups x WS_g)
   query_overhead      -> repro.query planner+dispatch cost vs direct calls
                          + fused multi-op vs per-op (sort-once asserted)
+  shard_scaling       -> two-phase mergeable-state execution over 1/2/4/8
+                         host devices (subprocess child so every other
+                         bench keeps one device; one-combine-tree asserted)
   sort_bench          -> sorter substrate (FLiMS role)
   moe_dispatch_bench  -> beyond-paper: engine-as-MoE-dispatch vs one-hot
 
-``swag_bench`` and ``query_overhead`` rows additionally land in
-``BENCH_swag.json`` at the repo root — machine-readable (name, us_per_call,
-tuples_per_s) so the SWAG perf + dispatch-overhead trajectory is tracked
-across PRs.
+``swag_bench``, ``query_overhead`` and ``shard_scaling`` rows additionally
+land in ``BENCH_swag.json`` at the repo root — machine-readable (name,
+us_per_call, tuples_per_s) so the SWAG perf + dispatch-overhead +
+shard-scaling trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ import sys
 _REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 #: modules whose rows feed the tracked BENCH_swag.json
-_JSON_MODULES = ("swag_bench", "query_overhead")
+_JSON_MODULES = ("swag_bench", "query_overhead", "shard_scaling")
 
 
 def _write_swag_json(rows: list[dict]) -> None:
@@ -41,13 +44,14 @@ def _write_swag_json(rows: list[dict]) -> None:
 
 def main() -> None:
     from benchmarks import (complexity_table, moe_dispatch_bench,
-                            query_overhead, sort_bench, speedup_groupby,
-                            swag_bench)
+                            query_overhead, shard_scaling, sort_bench,
+                            speedup_groupby, swag_bench)
     modules = [
         ("complexity_table", complexity_table),
         ("speedup_groupby", speedup_groupby),
         ("swag_bench", swag_bench),
         ("query_overhead", query_overhead),
+        ("shard_scaling", shard_scaling),
         ("sort_bench", sort_bench),
         ("moe_dispatch_bench", moe_dispatch_bench),
     ]

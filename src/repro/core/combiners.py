@@ -12,8 +12,23 @@ State conventions
 ``lift(key) -> state``      maps one tuple's key into scan state
 ``op(a, b) -> state``       associative combine of two adjacent states
                             (a is the *earlier* range, b the *later* one)
+``merge_partial(a, b) -> state``  combine two *per-range partial states* of
+                            the same group computed on different shards /
+                            panes (a the earlier range).  ``None`` means
+                            "same as ``op``" — true for every monoid here —
+                            and is resolved by :meth:`Combiner.partial_merge`.
+                            This is the algebra of two-phase execution:
+                            local-per-shard -> cross-device merge -> finalize
+                            (see ``repro.distributed.query_exec``).
 ``finalize(state) -> value``  maps the last-of-group state to the result field
-``identity(shape, dtype) -> state``  neutral element (used for carry init)
+``identity(shape, dtype) -> state``  neutral element (used for carry init,
+                            empty-shard partial tables)
+
+``mergeable=False`` marks operators whose lifted state is only meaningful
+relative to the full stream handed to ``lift`` (argmin/argmax carry
+stream-local positions), so their partials cannot be combined across
+independently-lifted ranges; the planner rejects them for sharded
+execution instead of merging them wrongly.
 
 Distinct count (the paper's "dc" engine variant) carries ``(dc, first, last)``
 and implements exactly the paper's distributed rule: when merging two adjacent
@@ -42,9 +57,48 @@ class Combiner:
     identity: Callable[[tuple, jnp.dtype], State]
     #: whether keys must be sorted within each group (paper's dc requirement)
     needs_sorted_keys: bool = False
+    #: combine two per-range partial states of one group (None -> ``op``);
+    #: see the module docstring's state conventions
+    merge_partial: Callable[[State, State], State] | None = None
+    #: False when partials cannot be merged across independently-lifted
+    #: ranges (argmin/argmax: stream-local positions)
+    mergeable: bool = True
+
+    def partial_merge(self, a: State, b: State) -> State:
+        """Merge two per-range partial states (``a`` the earlier range)."""
+        if not self.mergeable:
+            raise ValueError(
+                f"combiner {self.name!r} is not mergeable across shards: "
+                f"its lifted state is meaningful only relative to the full "
+                f"stream it was lifted from")
+        fn = self.merge_partial if self.merge_partial is not None else self.op
+        return fn(a, b)
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Combiner({self.name})"
+
+
+def partial_combiner(comb: Combiner) -> Combiner:
+    """The *table-level* view of ``comb``: a combiner whose elements are
+    already-aggregated per-range partial **states** (identity lift), folded
+    with :meth:`Combiner.partial_merge`.
+
+    Feeding per-shard / per-pane partial tables through the engine with this
+    combiner is the software rendering of the paper's merge network merging
+    the ``n`` entities' per-range results — the dc boundary-subtract happens
+    inside ``merge_partial`` exactly as it does between adjacent scan nodes.
+    """
+    if not comb.mergeable:
+        raise ValueError(f"combiner {comb.name!r} has no partial-state "
+                         f"merge (mergeable=False)")
+    return Combiner(
+        name=comb.name,
+        lift=lambda state: state,
+        op=comb.partial_merge,
+        finalize=comb.finalize,
+        identity=comb.identity,
+        needs_sorted_keys=False,
+    )
 
 
 def _acc_dtype(dtype) -> jnp.dtype:
@@ -166,6 +220,12 @@ def _distinct_count() -> Combiner:
         finalize=finalize,
         identity=identity,
         needs_sorted_keys=True,
+        # the paper's distributed rule IS the partial-state merge: two
+        # shards holding adjacent ranges of the (group, key)-sorted stream
+        # combine (dc, first, last) with the boundary subtract.  Exact only
+        # for adjacent ranges of the sorted order — the same contract the
+        # in-stream op already has.
+        merge_partial=op,
     )
 
 
@@ -247,7 +307,10 @@ def _argminmax(mode: str) -> Combiner:
         fill = _max_value(dtype) if mode == "argmin" else _min_value(dtype)
         return (jnp.full(shape, fill, dtype), jnp.zeros(shape, jnp.int32))
 
-    return Combiner(mode, lift, op, finalize, identity)
+    # positions come from a lift-time iota over *this* stream slice, so two
+    # independently-lifted ranges disagree about what index 0 means — no
+    # cross-shard partial merge exists without re-lifting globally
+    return Combiner(mode, lift, op, finalize, identity, mergeable=False)
 
 
 def _min_value(dtype):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import segscan
-from repro.core.combiners import Combiner, get_combiner
+from repro.core.combiners import Combiner, get_combiner, partial_combiner
 
 Array = jax.Array
 
@@ -39,8 +39,48 @@ class GroupAggResult(NamedTuple):
     num_groups: Array   # scalar int32
 
 
+class PartialTable(NamedTuple):
+    """A compact per-group *partial result table* — the engine stopped one
+    step before ``finalize``.
+
+    This is the unit of two-phase (mergeable-state) execution: each shard /
+    pane reduces its range of the stream to one of these, and tables merge
+    with :func:`combine_partial_tables` until one remains, which then
+    finalizes.  Rows are ascending unique group ids with a ``PAD_GROUP``
+    tail; invalid rows hold the combiner identity.
+    """
+    groups: Array       # [C] int32 — ascending unique group ids (PAD tail)
+    states: dict        # {op name: state pytree, each leaf [C, ...]}
+    valid: Array        # [C] bool
+    num_groups: Array   # scalar int32
+
+
 def _resolve(op) -> Combiner:
     return op if isinstance(op, Combiner) else get_combiner(op)
+
+
+def _compact_layout(groups: Array, emit: Array):
+    """Step (e), shared by every emitting pass: the reverse-butterfly
+    compaction permutation (prefix sum of ``emit``), the compacted group
+    column, and the valid mask/count."""
+    n = groups.shape[0]
+    perm = segscan.exclusive_prefix_sum(emit)
+    scatter_idx = jnp.where(emit, perm, n)  # invalid -> dropped slot
+    out_groups = jnp.full((n + 1,), PAD_GROUP, jnp.int32).at[scatter_idx].set(
+        groups, mode="drop")[:n]
+    num = jnp.sum(emit.astype(jnp.int32))
+    out_valid = jnp.arange(n) < num
+    return scatter_idx, out_groups, num, out_valid
+
+
+def _scatter_states(scanned, ident, scatter_idx, n: int):
+    """Compact a scanned state pytree: each leaf scattered by the shared
+    permutation, dropped slots filled with the combiner identity leaf."""
+    def one(leaf, fill):
+        buf = jnp.full((n + 1,) + leaf.shape[1:], fill, leaf.dtype)
+        return buf.at[scatter_idx].set(leaf, mode="drop")[:n]
+
+    return jax.tree.map(one, scanned, jax.tree.map(jnp.asarray, ident))
 
 
 def multi_engine_step(groups: Array, keys: Array, ops, *,
@@ -113,12 +153,7 @@ def multi_engine_step(groups: Array, keys: Array, ops, *,
 
     # (e) reverse butterfly: permutation index = prefix sum of valid bits —
     # computed once, reused by every op's value scatter
-    perm = segscan.exclusive_prefix_sum(emit)
-    scatter_idx = jnp.where(emit, perm, n)  # invalid -> dropped slot
-    out_groups = jnp.full((n + 1,), PAD_GROUP, jnp.int32).at[scatter_idx].set(
-        groups, mode="drop")[:n]
-    num = jnp.sum(emit.astype(jnp.int32))
-    out_valid = jnp.arange(n) < num
+    scatter_idx, out_groups, num, out_valid = _compact_layout(groups, emit)
 
     values = {}
     new_carries = []
@@ -146,6 +181,114 @@ def multi_engine_step(groups: Array, keys: Array, ops, *,
         new_carries.append(new_carry)
 
     return (out_groups, values, out_valid, num), tuple(new_carries)
+
+
+def multi_engine_partials(groups: Array, keys: Array, ops, *,
+                          n_valid: Array | None = None) -> PartialTable:
+    """The local phase of two-phase execution: one engine pass that stops
+    **before** ``finalize`` and returns the compact per-group partial-state
+    table of this range of the stream.
+
+    Same contract as :func:`multi_engine_step` (input sorted by group id;
+    ``n_valid`` marks a real prefix) but no carries and no finalization —
+    the caller merges tables from adjacent ranges with
+    :func:`combine_partial_tables` and finalizes once, which is exactly the
+    paper's split into per-range entities ``n`` and combining entities
+    ``n'``.
+    """
+    combiners = tuple(_resolve(op) for op in ops)
+    names = [c.name for c in combiners]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate combiner names in ops: {names}")
+
+    n = groups.shape[0]
+    groups = groups.astype(jnp.int32)
+    if n_valid is not None:
+        groups = jnp.where(jnp.arange(n) < n_valid, groups, PAD_GROUP)
+
+    starts = segscan.segment_starts(groups)
+    emit = segscan.segment_ends(groups) & (groups != PAD_GROUP)
+    scatter_idx, out_groups, num, out_valid = _compact_layout(groups, emit)
+
+    states = {}
+    for combiner in combiners:
+        scanned = segscan.segmented_scan(starts, combiner.lift(keys), combiner)
+        states[combiner.name] = _scatter_states(
+            scanned, combiner.identity((), keys.dtype), scatter_idx, n)
+    return PartialTable(out_groups, states, out_valid, num)
+
+
+def combine_partial_tables(a: PartialTable, b: PartialTable, ops, *,
+                           key_dtype) -> PartialTable:
+    """Merge two per-range partial tables (``a`` the earlier range) — one
+    node of the cross-device combine tree.
+
+    Both tables' rows are ascending unique group ids with ``PAD_GROUP``
+    tails, so one 2-key sort of the concatenated rows ((group, provenance)
+    — provenance keeps ``a`` before ``b`` within a group, which the
+    order-sensitive merges (dc's boundary rule, first/last) require) makes
+    equal groups adjacent; a segmented fold with each op's
+    :func:`repro.core.combiners.partial_combiner` then collapses them and
+    the shared compaction re-packs the result.  Output width is the sum of
+    the input widths (static shapes; real groups can never exceed that).
+    """
+    combiners = tuple(_resolve(op) for op in ops)
+    g = jnp.concatenate([a.groups, b.groups]).astype(jnp.int32)
+    tag = jnp.concatenate([
+        jnp.zeros(a.groups.shape, jnp.int32),
+        jnp.ones(b.groups.shape, jnp.int32)])
+    states = {
+        c.name: jax.tree.map(lambda x, y: jnp.concatenate([x, y]),
+                             a.states[c.name], b.states[c.name])
+        for c in combiners}
+    leaves, treedef = jax.tree.flatten(states)
+    sorted_ops = jax.lax.sort((g, tag, *leaves), num_keys=2, is_stable=True)
+    g = sorted_ops[0]
+    states = jax.tree.unflatten(treedef, sorted_ops[2:])
+
+    n = g.shape[0]
+    starts = segscan.segment_starts(g)
+    emit = segscan.segment_ends(g) & (g != PAD_GROUP)
+    scatter_idx, out_groups, num, out_valid = _compact_layout(g, emit)
+
+    out_states = {}
+    for combiner in combiners:
+        folded = segscan.segmented_scan(starts, states[combiner.name],
+                                        partial_combiner(combiner))
+        out_states[combiner.name] = _scatter_states(
+            folded, combiner.identity((), key_dtype), scatter_idx, n)
+    return PartialTable(out_groups, out_states, out_valid, num)
+
+
+def empty_partial_table(width: int, ops, key_dtype) -> PartialTable:
+    """The identity of :func:`combine_partial_tables` — what an empty shard
+    contributes to the combine tree."""
+    combiners = tuple(_resolve(op) for op in ops)
+    states = {
+        c.name: jax.tree.map(
+            lambda fill: jnp.full((width,) + jnp.shape(fill),
+                                  jnp.asarray(fill), jnp.asarray(fill).dtype),
+            c.identity((), key_dtype))
+        for c in combiners}
+    return PartialTable(
+        groups=jnp.full((width,), PAD_GROUP, jnp.int32),
+        states=states,
+        valid=jnp.zeros((width,), bool),
+        num_groups=jnp.zeros((), jnp.int32),
+    )
+
+
+def finalize_partial_table(table: PartialTable, ops) -> tuple[Array, dict,
+                                                              Array, Array]:
+    """The last stage of the two-phase pipeline: apply each op's
+    ``finalize`` to the merged table (invalid rows zeroed)."""
+    combiners = tuple(_resolve(op) for op in ops)
+    values = {}
+    for combiner in combiners:
+        v = combiner.finalize(table.states[combiner.name])
+        values[combiner.name] = jnp.where(table.valid, v,
+                                          jnp.zeros((), v.dtype))
+    return table.groups, values, table.valid, table.num_groups
 
 
 def engine_step(groups: Array, keys: Array, op, *,

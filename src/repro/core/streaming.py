@@ -106,6 +106,89 @@ def stream_push(groups: Array, keys: Array, carries, combiners, *,
     return (out_groups, out_values, out_valid, num, rr), new_carries
 
 
+def stream_push_table(table, carries, combiners, *, first_group,
+                      any_real, p_ports: int = 4):
+    """The emission half of a *sharded* rolling push: given the batch's
+    merged per-group :class:`repro.core.engine.PartialTable` (from the
+    cross-shard combine tree of ``repro.distributed.query_exec``), fold in
+    the rolling carry, emit every group but the open tail, and roll the
+    tail into the new carry.
+
+    Mirrors :func:`stream_push` slot-for-slot — closed-carry prepend slot,
+    round-robin ports, carry bookkeeping — so a sharded streaming query is
+    bit-identical to the single-device one (for exactly-mergeable ops).
+
+    ``first_group`` is the raw batch's leading group id (drives the
+    close-carry decision, exactly as in :func:`stream_push`); ``any_real``
+    is False for an all-padding batch (``n_valid == 0``).
+    """
+    combiners = tuple(c if isinstance(c, Combiner) else get_combiner(c)
+                      for c in combiners)
+    c_slots = table.groups.shape[0]
+    lead = carries[0]
+    emitted_before = lead.emitted
+
+    closes_carry = (lead.nonempty & any_real
+                    & (first_group.astype(jnp.int32) != lead.group))
+    carried_group = lead.group
+    carried_values = {
+        c.name: c.finalize(jax.tree.map(jnp.asarray, cr.state))
+        for c, cr in zip(combiners, carries)}
+
+    # the carry continues into the batch's first group: fold its state into
+    # table row 0 (the earlier range on the left)
+    applies = lead.nonempty & any_real & ~closes_carry
+    num_t = table.num_groups
+    idx = jnp.arange(c_slots)
+    emit_row = table.valid & (idx < num_t - 1)   # withhold the open tail
+    num = jnp.maximum(num_t - 1, 0) + closes_carry.astype(jnp.int32)
+
+    out_values = {}
+    new_carries = []
+    tail_idx = jnp.maximum(num_t - 1, 0)
+    for c, cr in zip(combiners, carries):
+        st = table.states[c.name]
+        carry_state = jax.tree.map(lambda x: jnp.asarray(x)[None], cr.state)
+        merged0 = c.partial_merge(carry_state,
+                                  jax.tree.map(lambda x: x[:1], st))
+        st = jax.tree.map(
+            lambda m, s: jnp.concatenate(
+                [jnp.where(applies, m, s[:1]), s[1:]]), merged0, st)
+
+        vals = c.finalize(st)
+        row_vals = jnp.where(emit_row, vals, jnp.zeros((), vals.dtype))
+        cv = carried_values[c.name]
+        col = jnp.concatenate([
+            jnp.where(closes_carry, cv, jnp.zeros((), cv.dtype))[None],
+            row_vals])
+        out_values[c.name] = col
+
+        tail_state = jax.tree.map(lambda s: s[tail_idx], st)
+        new_carries.append(segscan.Carry(
+            group=jnp.where(any_real, table.groups[tail_idx],
+                            cr.group).astype(jnp.int32),
+            state=jax.tree.map(
+                lambda t, old: jnp.where(any_real, t, jnp.asarray(old)),
+                tail_state, jax.tree.map(jnp.asarray, cr.state)),
+            nonempty=cr.nonempty | any_real,
+            emitted=(emitted_before + num).astype(jnp.int32),
+        ))
+
+    # prepend the carried group's slot; rotate so valid entries stay dense
+    shift = (~closes_carry).astype(jnp.int32)
+    out_idx = jnp.arange(c_slots + 1)
+    src = jnp.clip(out_idx + shift, 0, c_slots)
+    row_groups = jnp.where(emit_row, table.groups, _engine.PAD_GROUP)
+    out_groups = jnp.concatenate([
+        jnp.where(closes_carry, carried_group, _engine.PAD_GROUP)[None],
+        row_groups])[src]
+    out_values = {name: col[src] for name, col in out_values.items()}
+    out_valid = out_idx < num
+
+    rr = jnp.where(out_valid, (emitted_before + out_idx) % p_ports, -1)
+    return (out_groups, out_values, out_valid, num, rr), tuple(new_carries)
+
+
 class StreamingAggregator:
     """Stateful wrapper over a planned streaming Query; one jit-compiled
     fused engine pass per ``push``.
@@ -115,24 +198,51 @@ class StreamingAggregator:
     ingests the batch and emits one per-group-window evaluation — the
     paper's SWAG-with-groups approximation as a streaming surface
     (``ws_per_group`` per-group sizes, or ``ws`` as every group's default).
+
+    With ``num_shards``/``mesh`` every push runs the two-phase pipeline of
+    :mod:`repro.distributed.query_exec`: the batch is cut into per-shard
+    slices (``push`` also accepts them pre-cut as a ``[num_shards, L]``
+    array), each shard reduces its slice to a partial table, the combine
+    tree merges them, and the rolling carry folds in at emit time —
+    bit-identical slots to the single-device aggregator.
     """
 
     def __init__(self, op="sum", *, window=None, key_dtype=jnp.int32,
-                 p_ports: int = 4):
+                 p_ports: int = 4, num_shards: int | None = None,
+                 mesh=None):
         from repro import query as _q
         self.combiner = op if isinstance(op, Combiner) else get_combiner(op)
         self.window = window
+        if mesh is not None:
+            from repro.distributed import query_exec as _qx
+            mesh_shards = _qx.mesh_num_shards(mesh)
+            if num_shards is not None and num_shards != mesh_shards:
+                raise ValueError(
+                    f"num_shards={num_shards} contradicts the mesh's "
+                    f"{mesh_shards} devices")
+            num_shards = mesh_shards
+        self.num_shards = num_shards or 1
+        self.mesh = mesh
         self.plan = _q.plan(
             _q.Query(ops=(self.combiner,), window=window, streaming=True),
-            backend="reference")
+            backend="reference", num_shards=self.num_shards)
         self.carry = _q.init_stream_state(self.plan, key_dtype)
         self.p_ports = p_ports
-        self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports))
+        self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports,
+                                          mesh=mesh))
 
     def push(self, groups: Array, keys: Array,
              n_valid: Array | None = None) -> StreamResult:
         groups = jnp.asarray(groups, jnp.int32)
         keys = jnp.asarray(keys)
+        if groups.ndim == 2:
+            # per-shard pushes: [num_shards, L] slices of one batch
+            if groups.shape[0] != self.num_shards:
+                raise ValueError(
+                    f"per-shard push has {groups.shape[0]} slices but the "
+                    f"aggregator shards {self.num_shards} ways")
+            groups = groups.reshape(-1)
+            keys = keys.reshape(-1)
         (g, values, valid, num, rr), self.carry = self._step(
             groups, keys, self.carry, n_valid)
         return StreamResult(g, values[self.combiner.name], valid, num, rr)

@@ -52,7 +52,8 @@ import jax.numpy as jnp
 from repro.core import engine as _engine
 from repro.core import panestore as _panestore
 from repro.core import segscan, sorter
-from repro.core.combiners import Combiner, get_combiner
+from repro.core.combiners import (Combiner, get_combiner,
+                                  partial_combiner as _mk_partial_combiner)
 
 Array = jax.Array
 
@@ -229,16 +230,11 @@ def swag_panes(groups: Array, keys: Array, *, ws: int, wa: int, op="sum",
 
 
 def _partial_combiner(comb: Combiner) -> Combiner:
-    """Combine already-aggregated per-pane partial values: identity lift over
-    the partial value array, same associative op (valid because PARTIAL_OPS
-    states are single arrays with identity finalize)."""
-    return Combiner(
-        name=comb.name + "_partial",
-        lift=lambda v: v,
-        op=comb.op,
-        finalize=comb.finalize,
-        identity=comb.identity,
-    )
+    """Combine already-aggregated per-pane partial values: the table-level
+    view from :func:`repro.core.combiners.partial_combiner` (identity lift,
+    fold with ``merge_partial``).  Valid here because PARTIAL_OPS states are
+    single arrays with identity finalize."""
+    return _mk_partial_combiner(comb)
 
 
 def _swag_shared_partials(pg: Array, pk: Array, *, nw: int, p: int, wa: int,
@@ -401,6 +397,63 @@ def swag_per_group(groups: Array, keys: Array, *, spec, ops,
     return out, state
 
 
+def window_tails(g: Array, k: Array, pairs, *, interpolate: bool = False):
+    """All requested tails over one closed, (group, key)-sorted window — the
+    shared dispatch of the re-sort arm, the pane-merge arm and the sharded
+    run-merge stage.  Non-median ops share one fused engine pass
+    (:func:`engine.multi_engine_step`: segment marks + compaction
+    permutation computed once).  ``pairs`` is ``((op, name), ...)``."""
+    out = {}
+    shared = None
+    non_median = tuple(op for op, name in pairs if name != "median")
+    if non_median:
+        (tg, tvalues, tvalid, tnum), _ = _engine.multi_engine_step(
+            g, k, non_median)
+        out.update(tvalues)
+        shared = (tg, tvalid, tnum)
+    if any(name == "median" for _, name in pairs):
+        t = _median_sorted_window(g, k, interpolate=interpolate)
+        out["median"] = t.medians
+        shared = shared or (t.groups, t.valid, t.num_groups)
+    return shared[0], out, shared[1], shared[2]
+
+
+def pane_partials(pane_groups: Array, pane_keys: Array, ops, *,
+                  use_xla_sort: bool = False):
+    """The local phase of mesh-sharded SWAG, for one ``WA``-wide pane: sort
+    the pane once and stop before finalize.
+
+    Returns ``(sorted_groups, sorted_keys, table)`` where ``table`` is the
+    pane's per-group :class:`repro.core.engine.PartialTable` over ``ops``
+    (may be the empty tuple: run-channel-only queries still need the sorted
+    pane).  vmap over the pane axis; each shard of a device mesh runs this
+    over its own panes and only the compact tables / sorted runs cross
+    devices (`repro.distributed.query_exec`).
+    """
+    srt = sorter.sort_pairs_xla if use_xla_sort else sorter.sort_pairs
+    g, k = srt(pane_groups, pane_keys, full_width=True)
+    table = _engine.multi_engine_partials(g, k, ops)
+    return g, k, table
+
+
+def pane_table_channel(ops, key_dtype, p: int) -> list[bool]:
+    """Which ops take the compact per-pane partial-table channel (True) vs
+    the merged-sorted-window channel (False) on the pane path.
+
+    ONE predicate shared by the single-device pane dispatch
+    (:func:`swag_multi`) and the sharded pane pipeline
+    (``repro.distributed.query_exec``) — the sharded path's bit-identical
+    guarantee rests on both routing every op the same way.  Incremental
+    PARTIAL_OPS keep the table shortcut when panes actually share work
+    (``p > 1``); float sums stay on the merge channel (combining per-pane
+    partials reorders float additions, ~ulp drift vs the re-sort path).
+    """
+    reorder_sensitive = jnp.issubdtype(jnp.dtype(key_dtype), jnp.floating)
+    return [isinstance(op, str) and op in PARTIAL_OPS and p > 1
+            and not (op == "sum" and reorder_sensitive)
+            for op in ops]
+
+
 def swag_multi(groups: Array, keys: Array, *, ws: int, wa: int,
                ops: tuple, interpolate: bool = False,
                presorted: bool = False, use_xla_sort: bool = False,
@@ -431,23 +484,7 @@ def swag_multi(groups: Array, keys: Array, *, ws: int, wa: int,
                               presorted=presorted)
 
     def tails(g, k, pairs):
-        """All requested tails over one closed, sorted window — the shared
-        dispatch for both the re-sort and the pane-merge arm.  Non-median
-        ops share one fused engine pass (:func:`engine.multi_engine_step`:
-        segment marks + compaction permutation computed once)."""
-        out = {}
-        shared = None
-        non_median = tuple(op for op, name in pairs if name != "median")
-        if non_median:
-            (tg, tvalues, tvalid, tnum), _ = _engine.multi_engine_step(
-                g, k, non_median)
-            out.update(tvalues)
-            shared = (tg, tvalid, tnum)
-        if any(name == "median" for _, name in pairs):
-            t = _median_sorted_window(g, k, interpolate=interpolate)
-            out["median"] = t.medians
-            shared = shared or (t.groups, t.valid, t.num_groups)
-        return shared[0], out, shared[1], shared[2]
+        return window_tails(g, k, pairs, interpolate=interpolate)
 
     if use_panes:
         pg, pk, nw, p = _sort_panes(groups, keys, ws=ws, wa=wa,
@@ -457,10 +494,7 @@ def swag_multi(groups: Array, keys: Array, *, ws: int, wa: int,
         # their shared-partials shortcut (per-pane engine pass + group-only
         # merge of compacted partials), everything else rides the full
         # window merge — and *all* of them share the one pane sort above
-        reorder_sensitive = jnp.issubdtype(keys.dtype, jnp.floating)
-        partial_sel = [isinstance(op, str) and op in PARTIAL_OPS and p > 1
-                       and not (op == "sum" and reorder_sensitive)
-                       for op in ops]
+        partial_sel = pane_table_channel(ops, keys.dtype, p)
         merge_pairs = tuple((op, name) for (op, name), sel
                             in zip(zip(ops, names), partial_sel) if not sel)
 

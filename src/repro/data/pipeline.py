@@ -34,8 +34,14 @@ class DataPipeline:
     """iterator over batches: tokens/labels/loss_mask/domains."""
 
     def __init__(self, cfg: DataConfig, start_step: int = 0):
+        if cfg.num_shards <= 0:
+            raise ValueError(
+                f"num_shards must be positive, got {cfg.num_shards}")
         if cfg.global_batch % cfg.num_shards:
-            raise ValueError("global_batch must divide num_shards")
+            raise ValueError(
+                f"num_shards must divide global_batch, got "
+                f"global_batch={cfg.global_batch} "
+                f"num_shards={cfg.num_shards}")
         self.cfg = cfg
         self.step = start_step
         ranks = np.arange(1, cfg.num_domains + 1, dtype=np.float64)

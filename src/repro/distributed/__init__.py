@@ -1,1 +1,2 @@
 from repro.distributed.sharding import Scheme, make_scheme  # noqa: F401
+from repro.distributed import query_exec  # noqa: F401

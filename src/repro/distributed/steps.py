@@ -65,7 +65,8 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig,
 
 def make_query_step(query, *, backend: str | None = None, p_ports: int = 4,
                     mesh: jax.sharding.Mesh | None = None,
-                    data_axis: str = "data"):
+                    data_axis: str = "data",
+                    shard: bool = False):
     """jit'd executor for one :class:`repro.query.Query` — the serving-step
     factory for the aggregation engine (the analogue of ``make_decode_step``
     for the paper's workload).
@@ -79,9 +80,38 @@ def make_query_step(query, *, backend: str | None = None, p_ports: int = 4,
     replica per data shard, the multi-engine scale-out of the paper's
     multi-rate design.
 
+    ``shard=True`` instead runs ONE query two-phase over all of ``mesh``'s
+    devices (``repro.distributed.query_exec``: per-shard partial tables,
+    one combine tree) — a single logical answer, bit-identical to the
+    single-device result for exactly-mergeable ops, rather than one
+    replica per slice.
+
     Returns ``(step, plan)``.
     """
     from repro import query as Q
+
+    if shard:
+        if mesh is None:
+            raise ValueError("shard=True needs a mesh to shard over")
+        from repro.distributed.query_exec import mesh_num_shards
+        plan = Q.plan(query, backend=backend,
+                      num_shards=mesh_num_shards(mesh),
+                      devices=list(mesh.devices.flat))
+        if plan.path == "stream":
+            raw = Q.stream_fn(plan, p_ports=p_ports, mesh=mesh)
+
+            def stream_step(groups, keys, state):
+                (g, values, valid, num, _rr), new_state = raw(
+                    groups, keys, state)
+                return Q.AggResult(g, values, valid, num), new_state
+
+            return jax.jit(stream_step, donate_argnums=(2,)), plan
+
+        def sharded_step(groups, keys):
+            res, _ = Q.execute(plan, groups, keys, mesh=mesh)
+            return res
+
+        return jax.jit(sharded_step), plan
 
     plan = Q.plan(query, backend=backend)
 

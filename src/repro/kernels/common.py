@@ -26,8 +26,17 @@ from repro.core.combiners import Combiner
 Array = jax.Array
 
 
-def is_cpu() -> bool:
-    """True when the default JAX backend is CPU (no Mosaic compiler)."""
+def is_cpu(devices=None) -> bool:
+    """True when execution lands on CPU (no Mosaic compiler).
+
+    With ``devices`` (e.g. the devices of a mesh a query is being sharded
+    over) the probe answers for *those* devices instead of the process
+    default — each shard of a multi-device query picks its backend for the
+    hardware it actually runs on."""
+    if devices is not None:
+        devices = list(devices)
+        if devices:
+            return devices[0].platform == "cpu"
     return jax.default_backend() == "cpu"
 
 

@@ -176,7 +176,7 @@ def resolve_backend(explicit: str | None = None) -> str:
     return name
 
 
-def choose_backend(query) -> str:
+def choose_backend(query, devices=None) -> str:
     """Resolve ``auto`` for one query via the capability probe.
 
     On CPU every kernel would run in Pallas interpret mode — a correctness
@@ -185,8 +185,14 @@ def choose_backend(query) -> str:
     pane kernels when the window shape allows sharing sorted panes, the
     re-sort kernel otherwise, the tiled groupagg kernel for non-windowed
     queries.
+
+    ``devices`` makes the probe **device-aware**: pass the devices of the
+    mesh a sharded query runs over and the choice reflects *their*
+    platform, not the process default — each shard still picks
+    ``reference`` | ``pallas`` | ``pallas-panes`` locally, with its
+    per-shard kernels unchanged.
     """
-    if common.is_cpu():
+    if common.is_cpu(devices):
         return "reference"
     for name in ("pallas-panestore", "pallas-panes", "pallas"):
         if get_backend(name).supports(query) is None:

@@ -30,6 +30,13 @@ sorted stream — the ``function_select`` register serving N selections at
 once.  The single :class:`AggResult` type replaces the per-entry-point
 result tuples; all value columns share one ``groups``/``valid`` layout.
 
+``execute(q, ..., mesh=jax_mesh)`` (or ``num_shards=S``) runs the same
+query **data-parallel** through the two-phase mergeable-state pipeline
+(``partition -> local -> merge -> finalize``,
+:mod:`repro.distributed.query_exec`): per-shard partial tables, one
+cross-device combine tree, one finalize — bit-identical to single-device
+execution for the exactly-mergeable ops.
+
 Contracts (unchanged from the paper): non-windowed queries require the
 input sorted by group id (ties contiguous; an upstream sorter provides
 this); ``distinct_count`` and ``median`` additionally require keys sorted
@@ -210,25 +217,79 @@ class AggResult(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A Query lowered onto a concrete backend.
+    """A Query lowered onto a concrete backend and stage pipeline.
 
     Hashable and reusable: build once (validating spec + backend capability
     up front), execute many times — :func:`execute` accepts either a
     ``Query`` (planned on the fly) or a prebuilt ``Plan``.
+
+    ``stages`` is the explicit execution pipeline.  Single-shard plans run
+    ``("local", "finalize")``; sharded plans (``num_shards > 1``, or a
+    ``mesh=`` handed to :func:`execute`) run the two-phase mergeable-state
+    pipeline ``("partition", "local", "merge", "finalize")`` of
+    :mod:`repro.distributed.query_exec` — per-shard partial tables, one
+    cross-device combine tree, one finalize.
     """
     query: Query
     backend: str            # concrete registry name (never "auto")
     path: str               # "engine" | "window" | "stream"
     note: str = ""
+    num_shards: int = 1
+    stages: tuple = ("local", "finalize")
 
 
-def plan(query: Query, *, backend: str | None = None) -> Plan:
-    """Validate ``query`` and choose a backend.
+def _validate_sharded(query: Query, backend: str, num_shards: int) -> None:
+    """Reject queries whose states cannot merge across shards — at plan
+    time, with the reason (never a silent wrong answer)."""
+    if query.window is not None and query.window.per_group:
+        raise ValueError(
+            "per-group windows (Window(ws_per_group=...)) replay one shared "
+            "evicting pane store — a sequential structure with no "
+            "cross-shard merge; run them single-device")
+    if query.window is not None and query.streaming:
+        raise ValueError(
+            "streaming windowed queries thread one shared pane store as "
+            "their carry and cannot shard; stream the non-windowed query "
+            "per shard instead")
+    if query.presorted:
+        raise ValueError("presorted conflicts with sharded execution — the "
+                         "local phase sorts per shard/pane")
+    for op, nm in zip(query.ops, query.op_names):
+        if nm == "median":
+            if query.streaming:
+                raise ValueError("streaming median has no mergeable carry")
+            continue
+        comb = op if isinstance(op, Combiner) else get_combiner(nm)
+        if not comb.mergeable:
+            raise ValueError(
+                f"op {nm!r} has no cross-shard partial-state merge (its "
+                f"lifted positions are shard-local); run it single-device")
+    if backend == "pallas" and query.window is None:
+        from repro.distributed.query_exec import KERNEL_STATE_OPS
+        # median rides the sorted-run channel, never the group-by kernel
+        bad = sorted(set(query.op_names) - set(KERNEL_STATE_OPS)
+                     - {"median"})
+        if bad:
+            raise ValueError(
+                f"the pallas group-by kernel emits finalized values; only "
+                f"{sorted(KERNEL_STATE_OPS)} coincide with their partial "
+                f"states, so {bad} cannot shard on this backend — use "
+                f"reference")
+
+
+def plan(query: Query, *, backend: str | None = None, num_shards: int = 1,
+         devices=None) -> Plan:
+    """Validate ``query``, choose a backend, and lay out the stage pipeline.
 
     Precedence: ``backend`` argument > ``REPRO_BACKEND`` env var > ``auto``
     (capability probe: reference on CPU, fused kernels on accelerators).
     Raises ``ValueError`` when an explicitly requested backend cannot run
     the query (never a silent fallback).
+
+    ``num_shards > 1`` plans the two-phase mergeable-state pipeline
+    (``partition -> local -> merge -> finalize``); ``devices`` (e.g. a
+    mesh's devices) makes the ``auto`` probe answer for the hardware the
+    shards actually run on.
 
     Streaming windowed queries run on the per-group pane store: with a
     plain ``Window(ws)`` the window counts each group's *own* last ``ws``
@@ -264,11 +325,28 @@ def plan(query: Query, *, backend: str | None = None) -> Plan:
     name = _registry.resolve_backend(backend)
     note = ""
     if name == "auto":
-        name = _registry.choose_backend(query)
+        name = _registry.choose_backend(query, devices)
         note = "auto"
     reason = _registry.get_backend(name).supports(query)
     if reason is not None:
         raise _registry.unsupported_error(name, reason)
+
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    stages = ("local", "finalize")
+    if num_shards > 1:
+        try:
+            _validate_sharded(query, name, num_shards)
+        except ValueError:
+            # an *auto*-chosen kernel backend must not turn a shardable
+            # query into a plan failure — fall back to the total reference
+            # backend (an explicitly requested backend still raises)
+            if note != "auto" or name == "reference":
+                raise
+            name = "reference"
+            _validate_sharded(query, name, num_shards)
+            note = "auto; kernel backend cannot shard this query"
+        stages = ("partition", "local", "merge", "finalize")
 
     path = ("stream" if query.streaming
             else "window" if query.window is not None
@@ -280,7 +358,8 @@ def plan(query: Query, *, backend: str | None = None) -> Plan:
         # window (the paper's approximation) — flag it on the plan
         note = (note + "; " if note else "") + \
             "stream-window: ws serves as each group's per-group window"
-    return Plan(query=query, backend=name, path=path, note=note)
+    return Plan(query=query, backend=name, path=path, note=note,
+                num_shards=num_shards, stages=stages)
 
 
 def _combiners(query: Query) -> tuple[Combiner | None, ...]:
@@ -306,17 +385,32 @@ def _prepare_inputs(query: Query, groups, keys, n_valid):
     return groups, keys, n_valid
 
 
-def stream_fn(p: Plan, *, p_ports: int = 4):
+def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
     """Return the raw streaming step of a planned streaming query:
     ``(groups, keys, state, n_valid) -> ((groups, values, valid, num, rr),
     state)`` — jit-friendly (close over the static plan).
 
     Non-windowed streams thread per-op :class:`segscan.Carry` tuples;
     windowed streams thread a :class:`repro.core.panestore.PaneStoreState`
-    (push the batch, then emit one per-group evaluation)."""
+    (push the batch, then emit one per-group evaluation).  Sharded plans
+    (``num_shards > 1``) accept the same whole batch, run per-shard partial
+    tables through the combine tree (over ``mesh`` when given), and fold
+    the carry at emit time — bit-identical slots."""
     if p.path != "stream":
         raise ValueError("stream_fn needs a streaming plan")
     q = p.query
+
+    if p.num_shards > 1:
+        from repro.distributed import query_exec as _qx
+        combiners = _combiners(q)
+
+        def sharded_step(groups, keys, carries, n_valid=None):
+            return _qx.stream_push_sharded(
+                q, groups, keys, carries, combiners,
+                num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
+                p_ports=p_ports)
+
+        return sharded_step
 
     if q.window is not None:
         spec = q.window.store_spec()
@@ -437,9 +531,28 @@ def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
     return AggResult(r.groups, {name: r.values}, r.valid, r.num_groups)
 
 
+def _execute_sharded(p: Plan, groups, keys, n_valid, *, mesh, use_xla_sort,
+                     interpret, tile):
+    from repro.distributed import query_exec as _qx
+    q = p.query
+    if p.path == "window":
+        if n_valid is not None:
+            raise ValueError("n_valid applies to non-windowed queries")
+        g, values, valid, num = _qx._window_sharded(
+            q, groups, keys, num_shards=p.num_shards, mesh=mesh,
+            backend=p.backend, use_xla_sort=use_xla_sort,
+            interpret=interpret)
+    else:
+        g, values, valid, num = _qx._engine_sharded(
+            q, groups, keys, n_valid, num_shards=p.num_shards, mesh=mesh,
+            backend=p.backend, tile=tile, interpret=interpret)
+    return AggResult(g, values, valid, num)
+
+
 def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
-            n_valid=None, use_xla_sort: bool = False,
-            interpret: bool | None = None, tile: int = 1024):
+            n_valid=None, mesh=None, num_shards: int | None = None,
+            use_xla_sort: bool = False, interpret: bool | None = None,
+            tile: int = 1024):
     """Run a :class:`Query` (planned on the fly) or a prebuilt :class:`Plan`.
 
     Args:
@@ -451,6 +564,17 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
         (``None`` starts a fresh stream).
       backend: override the plan's backend (re-plans when it differs).
       n_valid: traced prefix-length override of ``query.n_valid``.
+      mesh: a :class:`jax.sharding.Mesh` — run the two-phase
+        mergeable-state pipeline data-parallel over the mesh's devices
+        (its flattened axes are the shard axis); the local phase runs
+        under ``shard_map`` and only compact partial tables / sorted runs
+        cross devices.  Bit-identical to single-device execution for the
+        exactly-mergeable ops (sum/count/min/max/mean/dc/median on
+        integer keys).
+      num_shards: shard count without a mesh — the identical two-phase
+        pipeline on one device (``vmap`` locals); useful for testing the
+        merge algebra anywhere.  With ``mesh`` it must match the device
+        count (or be omitted).
       use_xla_sort: reference backend — use ``lax.sort`` instead of the
         bitonic network for per-window sorting.
       interpret: kernel backends — force/suppress Pallas interpret mode
@@ -461,21 +585,42 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
       ``(AggResult, new_state)``; ``new_state`` is ``None`` unless the query
       streams.
     """
+    devices = None
+    if mesh is not None:
+        from repro.distributed import query_exec as _qx
+        mesh_shards = _qx.mesh_num_shards(mesh)
+        if num_shards is not None and num_shards != mesh_shards:
+            raise ValueError(
+                f"num_shards={num_shards} contradicts the mesh's "
+                f"{mesh_shards} devices; pass one or the other")
+        num_shards = mesh_shards
+        devices = list(mesh.devices.flat)
+
     if isinstance(plan_or_query, Plan):
         p = plan_or_query
-        if backend is not None and backend != p.backend:
-            p = plan(p.query, backend=backend)
+        want_backend = backend if backend is not None else p.backend
+        want_shards = num_shards if num_shards is not None else p.num_shards
+        if want_backend != p.backend or want_shards != p.num_shards:
+            p = plan(p.query, backend=want_backend, num_shards=want_shards,
+                     devices=devices)
     else:
-        p = plan(plan_or_query, backend=backend)
+        p = plan(plan_or_query, backend=backend,
+                 num_shards=num_shards if num_shards is not None else 1,
+                 devices=devices)
 
     groups, keys, n_valid = _prepare_inputs(p.query, groups, keys, n_valid)
 
     if p.path == "stream":
         if state is None:
             state = init_stream_state(p, keys.dtype)
-        (g, values, valid, num, _rr), new_state = stream_fn(p)(
+        (g, values, valid, num, _rr), new_state = stream_fn(p, mesh=mesh)(
             groups, keys, state, n_valid)
         return AggResult(g, values, valid, num), new_state
+
+    if p.num_shards > 1:
+        return _execute_sharded(p, groups, keys, n_valid, mesh=mesh,
+                                use_xla_sort=use_xla_sort,
+                                interpret=interpret, tile=tile), None
 
     if p.path == "window":
         if n_valid is not None:

@@ -33,3 +33,22 @@ def test_gpipe_two_stage_matches_sequential():
                        text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
+
+
+def test_data_pipeline_shard_validation():
+    """The divisibility check names the actual rule (num_shards divides
+    global_batch) and rejects non-positive shard counts."""
+    import pytest
+
+    from repro.data.pipeline import DataConfig, DataPipeline
+
+    ok = DataPipeline(DataConfig(vocab_size=64, seq_len=8, global_batch=8,
+                                 num_shards=4))
+    assert ok.make_batch(0)["tokens"].shape == (2, 8)
+    with pytest.raises(ValueError, match="num_shards must divide "
+                                         "global_batch"):
+        DataPipeline(DataConfig(vocab_size=64, seq_len=8, global_batch=8,
+                                num_shards=3))
+    with pytest.raises(ValueError, match="num_shards must be positive"):
+        DataPipeline(DataConfig(vocab_size=64, seq_len=8, global_batch=8,
+                                num_shards=0))
