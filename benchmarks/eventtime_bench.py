@@ -1,0 +1,85 @@
+"""Event-time windows: per-window replay vs the flip-batched two-stack.
+
+Random (unsorted) timestamps give **variable-width** windows — the shape
+the two-stack exists for: replay re-aggregates every framed window from
+scratch (O(sum of window widths), with the frame padded to the *widest*
+window), while the two-stack runs one front-scan + one back-scan per flip
+epoch and reads two lanes per window (O(N + NW)).  Both arms are
+``Query(("min", "max"), group_by=False, window=Window(range=R, slide=S))``
+on the reference backend, differing only in ``Window(strategy=...)``.
+
+The ``eventtime/reorder_ingest`` row times the streaming path's
+bounded-lateness buffer (one ``reorder_push`` of a shuffled batch): the
+per-tuple cost of out-of-order tolerance.
+
+Rows carry ``tuples_per_s`` so ``run.py`` merges them into
+``BENCH_swag.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import eventtime as et
+from repro.query import Query, Window, execute
+
+N = 32768
+T_MAX = 32768
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(9)
+    k = jnp.array(rng.integers(0, 1000, N).astype(np.int32))
+    t = rng.integers(0, T_MAX, N).astype(np.int32)
+    rows = []
+
+    for R, S in ((2048, 512), (4096, 1024)):
+        for strategy in ("replay", "twostack"):
+            q = Query(ops=("min", "max"), group_by=False,
+                      window=Window(range=R, slide=S, strategy=strategy))
+
+            def fn(kk, qq=q):
+                return execute(qq, None, kk, backend="reference",
+                               timestamps=t)[0]
+
+            us = time_fn(fn, k, iters=10)
+            nw = et.time_window_layout(t, R, S).starts.shape[0]
+            rows.append({
+                "name": f"eventtime/{strategy}_minmax_R{R}_S{S}",
+                "us_per_call": f"{us:.1f}",
+                "derived": f"nw={nw}",
+                "tuples_per_s": N / (us / 1e6),
+            })
+        rep = float(rows[-2]["us_per_call"])
+        two = float(rows[-1]["us_per_call"])
+        rows.append({
+            "name": f"eventtime/twostack_speedup_R{R}_S{S}",
+            "us_per_call": f"{two:.1f}",
+            "derived": f"{rep / two:.2f}x_vs_replay",
+        })
+
+    # streaming ingest: one shuffled push through the reorder buffer
+    L = 256
+    b = 1024
+    tb = np.sort(rng.integers(0, 8192, b)).astype(np.int32)
+    tb = tb[np.argsort(tb + rng.integers(0, L, b), kind="stable")]
+    spec = et.ReorderSpec(capacity=2048, max_lateness=L)
+    state = et.init_reorder(spec, jnp.int32)
+    gb = jnp.zeros(b, jnp.int32)
+    kb = jnp.array(rng.integers(0, 1000, b).astype(np.int32))
+    tbj = jnp.array(tb)
+
+    @jax.jit
+    def push(st):
+        return et.reorder_push(spec, st, tbj, gb, kb)
+
+    us = time_fn(push, state, iters=10)
+    rows.append({
+        "name": f"eventtime/reorder_ingest_b{b}_L{L}",
+        "us_per_call": f"{us:.1f}",
+        "derived": f"{b / us * 1e3:.1f}tuples_per_ms",
+        "tuples_per_s": b / (us / 1e6),
+    })
+    return rows

@@ -12,13 +12,22 @@ Prints ``name,us_per_call,derived`` CSV rows:
   shard_scaling       -> two-phase mergeable-state execution over 1/2/4/8
                          host devices (subprocess child so every other
                          bench keeps one device; one-combine-tree asserted)
+  eventtime_bench     -> time-range windows (Window(range=..., slide=...)):
+                         per-window replay vs the flip-batched two-stack,
+                         plus reorder-buffer ingest throughput
   sort_bench          -> sorter substrate (FLiMS role)
   moe_dispatch_bench  -> beyond-paper: engine-as-MoE-dispatch vs one-hot
+                         (quarantined: runs only via --only, never in the
+                         default sweep)
 
-``swag_bench``, ``query_overhead`` and ``shard_scaling`` rows additionally
-land in ``BENCH_swag.json`` at the repo root — machine-readable (name,
-us_per_call, tuples_per_s) so the SWAG perf + dispatch-overhead +
-shard-scaling trajectory is tracked across PRs.
+``swag_bench``, ``query_overhead``, ``shard_scaling`` and
+``eventtime_bench`` rows additionally land in ``BENCH_swag.json`` at the
+repo root — machine-readable (name, us_per_call, tuples_per_s) so the SWAG
+perf + dispatch-overhead + shard-scaling + event-time trajectory is tracked
+across PRs.
+
+``--only PREFIX`` runs the matching module(s) alone and merges their rows
+into the tracked json in place.
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ import sys
 _REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 #: modules whose rows feed the tracked BENCH_swag.json
-_JSON_MODULES = ("swag_bench", "query_overhead", "shard_scaling")
+_JSON_MODULES = ("swag_bench", "query_overhead", "shard_scaling",
+                 "eventtime_bench")
 
 
 def _write_swag_json(rows: list[dict]) -> None:
@@ -43,25 +53,45 @@ def _write_swag_json(rows: list[dict]) -> None:
 
 
 def main() -> None:
-    from benchmarks import (complexity_table, moe_dispatch_bench,
-                            query_overhead, shard_scaling, sort_bench,
-                            speedup_groupby, swag_bench)
+    import argparse
+
+    from benchmarks import (complexity_table, eventtime_bench,
+                            moe_dispatch_bench, query_overhead,
+                            shard_scaling, sort_bench, speedup_groupby,
+                            swag_bench)
     modules = [
         ("complexity_table", complexity_table),
         ("speedup_groupby", speedup_groupby),
         ("swag_bench", swag_bench),
         ("query_overhead", query_overhead),
         ("shard_scaling", shard_scaling),
+        ("eventtime_bench", eventtime_bench),
         ("sort_bench", sort_bench),
-        ("moe_dispatch_bench", moe_dispatch_bench),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    # beyond-paper demo, long-running: explicit --only opt-in, never part
+    # of the default sweep
+    quarantined = [("moe_dispatch_bench", moe_dispatch_bench)]
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="PREFIX", default=None,
+                    help="run only modules whose name starts with PREFIX; "
+                         "their BENCH_swag.json rows are merged in place "
+                         "(other modules' rows are kept)")
+    # positional module name kept for backward compatibility with
+    # `python -m benchmarks.run swag_bench`
+    ap.add_argument("module", nargs="?", default=None)
+    args = ap.parse_args()
+    only = args.only if args.only is not None else args.module
+    if only:
+        modules += quarantined
+        modules = [(n, m) for n, m in modules if n.startswith(only)]
+        if not modules:
+            ap.error(f"no benchmark module matches prefix {only!r}")
+
     print("name,us_per_call,derived")
     json_rows: list[dict] = []
     ran = []
     for name, mod in modules:
-        if only and only != name:
-            continue
         rows = mod.run()
         for row in rows:
             print(f"{row['name']},{row['us_per_call']},{row['derived']}",
@@ -70,7 +100,7 @@ def main() -> None:
             json_rows.extend(rows)
             ran.append(name)
     # only rewrite the tracked json when every contributing module ran
-    # (a single-module invocation must not drop the other module's rows)
+    # (a partial invocation must not drop the other modules' rows)
     if ran and (only or set(ran) == set(_JSON_MODULES)):
         if only:
             _merge_swag_json(json_rows)

@@ -70,6 +70,11 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+#: "no retirement" floor for time-mode pushes (mirrors
+#: ``repro.core.eventtime.TS_MIN``)
+TS_FLOOR = -(2 ** 30)
+
+
 @dataclasses.dataclass(frozen=True)
 class PaneStoreSpec:
     """Static configuration of one pane store (hashable; jit-static).
@@ -78,11 +83,25 @@ class PaneStoreSpec:
     constraint).  ``capacity``: number of pane slots in the shared buffer.
     ``default_ws``: window size for groups not listed in ``per_group``.
     ``per_group``: sorted tuple of ``(group_id, ws)`` overrides.
+
+    **Time mode** (``slide``/``time_range`` both set — the event-time layer
+    of ``repro.core.eventtime``): pane identity becomes the *time pane*
+    ``ts // slide`` instead of the within-group tuple count, each tuple's
+    timestamp rides through the pane sort as the ``seqs`` payload, and
+    panes retire by **watermark advance** (a pane is freed once its whole
+    time interval falls behind ``retire_below = watermark - time_range``)
+    rather than by tuple count.  ``wa`` then bounds the tuples one slot
+    holds of one (group, time-pane); denser traffic chains extra slots
+    with the same pane id.  Time mode is per-group-window-free
+    (``per_group`` must be empty): every group's window is the shared time
+    range ``[eval_time - time_range, eval_time)``.
     """
     wa: int
     capacity: int
     default_ws: int
     per_group: tuple = ()
+    slide: int | None = None
+    time_range: int | None = None
 
     def __post_init__(self):
         if self.wa <= 0 or self.wa & (self.wa - 1):
@@ -91,6 +110,16 @@ class PaneStoreSpec:
         if self.default_ws <= 0:
             raise ValueError(f"default_ws must be positive, got "
                              f"{self.default_ws}")
+        if (self.slide is None) != (self.time_range is None):
+            raise ValueError("slide and time_range come together (time "
+                             "mode) or not at all (count mode)")
+        if self.slide is not None:
+            if self.slide <= 0 or self.time_range <= 0:
+                raise ValueError(f"slide/time_range must be positive, got "
+                                 f"{self.slide}/{self.time_range}")
+            if self.per_group:
+                raise ValueError("time-mode stores share one time range — "
+                                 "per_group window overrides do not apply")
         pairs = tuple(sorted((int(g), int(w)) for g, w in self.per_group))
         for g, w in pairs:
             if w <= 0:
@@ -103,17 +132,28 @@ class PaneStoreSpec:
                 f"window (need >= {self.min_capacity} slots)")
 
     @property
+    def is_time(self) -> bool:
+        return self.slide is not None
+
+    @property
     def max_ws(self) -> int:
         return max([self.default_ws] + [w for _, w in self.per_group])
 
     @property
     def max_panes(self) -> int:
         """Most slots one group can hold: ceil(WS_g/WA) full panes plus one
-        straddling the window's trailing edge."""
+        straddling the window's trailing edge.  Time mode: slot chaining
+        (more than ``wa`` tuples per slide interval) means one group may in
+        the worst case own *every* slot, so the replay width must cover the
+        whole directory."""
+        if self.is_time:
+            return self.capacity
         return _ceil_div(self.max_ws, self.wa) + 1
 
     @property
     def min_capacity(self) -> int:
+        if self.is_time:
+            return _ceil_div(self.time_range, self.slide) + 1
         return self.max_panes
 
     @property
@@ -251,6 +291,97 @@ def push(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
     return state
 
 
+def _push_one_time(spec: PaneStoreSpec, st: PaneStoreState, g: Array,
+                   k: Array, t: Array, lv: Array,
+                   retire_below: Array) -> PaneStoreState:
+    """Absorb one timestamped tuple (time mode).  Pane identity is the time
+    pane ``t // slide`` (stored in ``base``); the timestamp rides the pane
+    sort as the ``seqs`` payload; a pane whose whole interval has fallen
+    behind ``retire_below`` is freed (watermark-driven retirement).  A
+    ``(group, pane)`` denser than ``wa`` tuples chains a fresh slot with
+    the same pane id.  Same worst-case-constant work per cycle as
+    :func:`_push_one`."""
+    c, wa = spec.capacity, spec.wa
+    g = g.astype(jnp.int32)
+    t = t.astype(jnp.int32)
+    pid = jnp.floor_divide(t, spec.slide)
+
+    # the index: this tuple's open pane is the (owner, pane-id) slot with
+    # room left — at most one exists (a chain's earlier links are full)
+    mine_open = (st.owner == g) & (st.base == pid) & (st.count < wa)
+    has_open = jnp.any(mine_open)
+
+    free = st.owner == PAD_GROUP
+    any_free = jnp.any(free)
+    imax = jnp.iinfo(jnp.int32).max
+    oldest = jnp.argmin(jnp.where(free, imax, st.stamp))
+    slot = jnp.where(has_open, jnp.argmax(mine_open),
+                     jnp.where(any_free, jnp.argmax(free), oldest))
+
+    lane = jnp.where(has_open, st.count[slot], 0)
+    onehot = jnp.arange(c) == slot
+    at = onehot[:, None] & (jnp.arange(wa)[None, :] == lane)
+
+    new_keys = jnp.where(at & lv, jnp.broadcast_to(k, st.keys.shape),
+                         st.keys)
+    new_seqs = jnp.where(at & lv, t, st.seqs)
+    new_count = jnp.where(onehot & lv,
+                          jnp.where(has_open, st.count + 1, 1), st.count)
+    new_owner = jnp.where(onehot & lv & ~has_open, g, st.owner)
+    new_base = jnp.where(onehot & lv & ~has_open, pid, st.base)
+    new_stamp = jnp.where(onehot & lv & ~has_open, st.clock, st.stamp)
+    clock = st.clock + (lv & ~has_open).astype(jnp.int32)
+
+    # sort the pane once, the moment it closes (timestamp rides as payload)
+    closes = lv & (new_count[slot] == wa)
+    row_k, row_s = new_keys[slot], new_seqs[slot]
+    order = jnp.argsort(row_k, stable=True)
+    sorted_row = onehot[:, None] & jnp.ones((1, wa), bool)
+    new_keys = jnp.where(sorted_row & closes, row_k[order][None, :], new_keys)
+    new_seqs = jnp.where(sorted_row & closes, row_s[order][None, :], new_seqs)
+
+    # watermark-driven retirement: the pane [base*slide, (base+1)*slide)
+    # can never again intersect a window once it is wholly below the horizon
+    occ = new_owner != PAD_GROUP
+    dead = occ & ((new_base + 1) * spec.slide <= retire_below)
+    new_owner = jnp.where(dead, PAD_GROUP, new_owner)
+    new_count = jnp.where(dead, 0, new_count)
+    new_stamp = jnp.where(dead, -1, new_stamp)
+
+    return PaneStoreState(new_owner, new_keys, new_seqs, new_count,
+                          new_base, new_stamp, clock)
+
+
+def push_time(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
+              keys: Array, ts: Array, live: Array | None = None,
+              retire_below: Array | None = None) -> PaneStoreState:
+    """Stream one batch of timestamped tuples through a time-mode store.
+
+    ``live`` is a full per-lane mask (reorder-buffer emissions are not a
+    valid prefix); ``retire_below`` the retirement horizon, normally
+    ``watermark - time_range`` (``None`` retires nothing).
+    """
+    if not spec.is_time:
+        raise ValueError("push_time needs a time-mode PaneStoreSpec "
+                         "(slide/time_range set); use push() for "
+                         "count-based panes")
+    groups = jnp.asarray(groups, jnp.int32)
+    keys = jnp.asarray(keys, state.keys.dtype)
+    ts = jnp.asarray(ts, jnp.int32)
+    n = groups.shape[-1]
+    lv = (jnp.ones((n,), bool) if live is None
+          else jnp.asarray(live, bool))
+    rb = (jnp.full((), TS_FLOOR, jnp.int32) if retire_below is None
+          else jnp.asarray(retire_below, jnp.int32))
+
+    def step(st, x):
+        g, k, t, v = x
+        return _push_one_time(spec, st, g, k, t, v, rb), None
+
+    state, _ = jax.lax.scan(step, state, (groups, keys, ts, lv))
+    return state
+
+
 class ReplayRuns(NamedTuple):
     """One gathered replay snapshot: per output row (candidate group), its
     pane subset flattened to ``runs * WA`` lanes of presorted runs.
@@ -263,17 +394,30 @@ class ReplayRuns(NamedTuple):
     num_groups: Array  # [] int32
 
 
-def gather_runs(spec: PaneStoreSpec, state: PaneStoreState) -> ReplayRuns:
+def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
+                eval_time: Array | None = None) -> ReplayRuns:
     """The per-group pane index, materialised: order the slot directory by
     (owner, base), dedupe owners, and hand each group its (static-width)
     pane subset as presorted runs with a liveness mask.
 
     Open panes (arrival-ordered) are sorted here — every *closed* pane was
     sorted exactly once at close, so the sort-once amortisation holds.
+
+    Time mode takes ``eval_time`` and masks by the stored timestamps: a
+    lane is live iff its tuple falls in ``[eval_time - time_range,
+    eval_time)`` (every group shares the one time window, so no per-group
+    ``m_g``/``WS_g`` bookkeeping applies).
     """
     c, wa = spec.capacity, spec.wa
     s = spec.runs
     sentinel = _key_sentinel(state.keys.dtype)
+    if spec.is_time:
+        if eval_time is None:
+            raise ValueError("time-mode stores gather against a watermark: "
+                             "pass eval_time=")
+        et = jnp.asarray(eval_time, jnp.int32)
+    elif eval_time is not None:
+        raise ValueError("eval_time only applies to time-mode stores")
 
     so, sb, perm = jax.lax.sort(
         (state.owner, state.base, jnp.arange(c, dtype=jnp.int32)),
@@ -305,11 +449,6 @@ def gather_runs(spec: PaneStoreSpec, state: PaneStoreState) -> ReplayRuns:
         rk = state.keys[sidx]                      # [S, WA]
         rs = state.seqs[sidx]
         rc = jnp.where(slot_ok, state.count[sidx], 0)
-        rb = state.base[sidx]
-        # newest slot is the last occupied one (base-ascending order)
-        last = jnp.clip(ns - 1, 0, s - 1)
-        m_g = jnp.where(ns > 0, rb[last] + rc[last], 0)
-        lo = m_g - spec.ws_of(g)
 
         filled = lanes < rc[:, None]
         # open (and padded) runs: push dead lanes to the tail and sort, so
@@ -324,7 +463,18 @@ def gather_runs(spec: PaneStoreSpec, state: PaneStoreState) -> ReplayRuns:
         rs = jnp.where(is_sorted[:, None], rs, srt_s)
         filled = jnp.where(is_sorted[:, None], filled, srt_f)
 
-        lane_ok = slot_ok[:, None] & filled & (rs >= lo)
+        if spec.is_time:
+            # rs holds timestamps: live iff in the evaluation window
+            lane_ok = (slot_ok[:, None] & filled &
+                       (rs >= et - spec.time_range) & (rs < et))
+        else:
+            # rs holds within-group seqs: newest slot is the last occupied
+            # one (base-ascending order); stale lanes masked dead
+            rb = state.base[sidx]
+            last = jnp.clip(ns - 1, 0, s - 1)
+            m_g = jnp.where(ns > 0, rb[last] + rc[last], 0)
+            lo = m_g - spec.ws_of(g)
+            lane_ok = slot_ok[:, None] & filled & (rs >= lo)
         return rk.reshape(-1), lane_ok.reshape(-1)
 
     run_keys, run_valid = jax.vmap(row)(jnp.arange(c))
@@ -401,7 +551,7 @@ def _direct_tails(keys_c: Array, cnt: Array, names, *, key_dtype,
 
 
 def replay(spec: PaneStoreSpec, state: PaneStoreState, ops, *,
-           interpolate: bool = False):
+           interpolate: bool = False, eval_time: Array | None = None):
     """Evaluate every live group's window from the store (reference path).
 
     Returns ``(groups [C], {name: values [C]}, valid [C], num_groups)`` —
@@ -412,9 +562,12 @@ def replay(spec: PaneStoreSpec, state: PaneStoreState, ops, *,
     assumed to mean the standard op); any other combiner falls back to an
     engine pass over the merged, compacted window — exact vs a full
     re-sort of the same window.
+
+    Time mode evaluates the shared window ``[eval_time - time_range,
+    eval_time)`` (normally ``eval_time`` = the watermark).
     """
     names = [op.name if isinstance(op, Combiner) else op for op in ops]
-    runs = gather_runs(spec, state)
+    runs = gather_runs(spec, state, eval_time=eval_time)
     key_dtype = state.keys.dtype
 
     fallback = [(op, name) for op, name in zip(ops, names)
@@ -430,10 +583,27 @@ def replay(spec: PaneStoreSpec, state: PaneStoreState, ops, *,
             for op, name in fallback:
                 r = _engine._group_by_aggregate(gc, kc, op)
                 vals[name] = r.values[0]
-        return vals
+        return vals, cnt
 
-    values = jax.vmap(row)(runs.groups, runs.run_keys, runs.run_valid)
-    valid = jnp.arange(spec.capacity) < runs.num_groups
+    values, cnts = jax.vmap(row)(runs.groups, runs.run_keys, runs.run_valid)
+    c = spec.capacity
+    valid = jnp.arange(c) < runs.num_groups
+    if spec.is_time:
+        # a group may still own slots while every one of its tuples sits
+        # outside [eval_time - R, eval_time): drop those rows (stable
+        # scatter-compaction, same trick as merged_window)
+        keep = valid & (cnts > 0)
+        rank = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+        idx = jnp.where(keep, rank, c)
+        groups_o = jnp.full((c + 1,), PAD_GROUP, jnp.int32).at[idx].set(
+            runs.groups, mode="drop")[:c]
+        num = jnp.sum(keep.astype(jnp.int32))
+        valid = jnp.arange(c) < num
+        values = {name: jnp.zeros((c + 1,), v.dtype).at[idx].set(
+            v, mode="drop")[:c] for name, v in values.items()}
+        values = {name: jnp.where(valid, v, jnp.zeros((), v.dtype))
+                  for name, v in values.items()}
+        return groups_o, values, valid, num
     values = {name: jnp.where(valid, v, jnp.zeros((), v.dtype))
               for name, v in values.items()}
     return runs.groups, values, valid, runs.num_groups

@@ -232,9 +232,17 @@ class StreamingAggregator:
                                           mesh=mesh))
 
     def push(self, groups: Array, keys: Array,
-             n_valid: Array | None = None) -> StreamResult:
+             n_valid: Array | None = None,
+             timestamps: Array | None = None) -> StreamResult:
         groups = jnp.asarray(groups, jnp.int32)
         keys = jnp.asarray(keys)
+        is_time = self.window is not None and self.window.is_time
+        if is_time and timestamps is None:
+            raise ValueError("event-time windows (Window(range=...)) need "
+                             "timestamps= on every push")
+        if not is_time and timestamps is not None:
+            raise ValueError("timestamps apply to event-time windows "
+                             "(Window(range=...)) only")
         if groups.ndim == 2:
             # per-shard pushes: [num_shards, L] slices of one batch
             if groups.shape[0] != self.num_shards:
@@ -243,14 +251,46 @@ class StreamingAggregator:
                     f"aggregator shards {self.num_shards} ways")
             groups = groups.reshape(-1)
             keys = keys.reshape(-1)
-        (g, values, valid, num, rr), self.carry = self._step(
-            groups, keys, self.carry, n_valid)
+            if timestamps is not None:
+                timestamps = jnp.asarray(timestamps).reshape(-1)
+        if is_time:
+            (g, values, valid, num, rr), self.carry = self._step(
+                groups, keys, self.carry, n_valid, timestamps)
+        else:
+            (g, values, valid, num, rr), self.carry = self._step(
+                groups, keys, self.carry, n_valid)
         return StreamResult(g, values[self.combiner.name], valid, num, rr)
 
     def flush(self) -> StreamResult:
         """Close the stream: emit the open group (windowed: re-emit every
-        live group's current window), reset the carry."""
+        live group's current window; event-time: drain the reorder
+        buffer(s) and evaluate past the last tuple), reset the carry."""
         from repro import query as _q
+        if self.window is not None and self.window.is_time:
+            from repro.core import eventtime as _eventtime
+            from repro.core import panestore as _ps
+            rspec = self.window.reorder_spec()
+            spec = self.window.store_spec()
+            rstate, pstate = self.carry
+            if self.num_shards > 1:
+                from repro.distributed import query_exec as _qx
+                emits, rstate = jax.vmap(
+                    lambda st: _eventtime.reorder_flush(rspec, st))(rstate)
+                eg, ek, ets, elive = _qx.merge_emissions(emits)
+                end = jnp.max(rstate.max_ts)
+            else:
+                emit, rstate = _eventtime.reorder_flush(rspec, rstate)
+                eg, ek, ets, elive = emit.groups, emit.keys, emit.ts, \
+                    emit.live
+                end = rstate.max_ts
+            pstate = _ps.push_time(spec, pstate, eg, ek, ets, live=elive)
+            g, values, valid, num = _ps.replay(
+                spec, pstate, (self.combiner,), eval_time=end + 1)
+            rr = jnp.where(valid, jnp.arange(spec.capacity) % self.p_ports,
+                           -1)
+            self.carry = _q.init_stream_state(self.plan, pstate.keys.dtype)
+            return StreamResult(g, values[self.combiner.name], valid, num,
+                                rr)
         if self.window is not None:
             from repro.core import panestore as _ps
             spec = self.window.store_spec()

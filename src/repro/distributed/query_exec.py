@@ -67,6 +67,10 @@ PAD_GROUP = _engine.PAD_GROUP
 #: (single-array state, identity finalize) — the kernel-backend local phase
 KERNEL_STATE_OPS = _swag.PARTIAL_OPS
 
+#: the cross-shard watermark rule (re-export): a sharded stream's watermark
+#: is the minimum over its shards' watermarks
+from repro.core.eventtime import merge_watermarks  # noqa: E402,F401
+
 
 def mesh_num_shards(mesh) -> int:
     """Total devices of ``mesh`` — the shard count of its flattened axes."""
@@ -389,6 +393,94 @@ def _window_partitioned(q, groups, keys, *, num_shards, backend,
 # --------------------------------------------------------------------------
 # streaming path
 # --------------------------------------------------------------------------
+
+def stream_push_eventtime_sharded(q, groups, keys, timestamps, state, *,
+                                  num_shards, mesh=None, n_valid=None,
+                                  p_ports: int = 4):
+    """One sharded event-time push: per-shard bounded-lateness reorder
+    buffers (stacked leading axis — each shard tracks its own watermark),
+    released against the **min-merged** global watermark
+    (:func:`repro.core.eventtime.merge_watermarks`: a tuple may still
+    arrive on the slowest shard), then one shared time-pane store.
+
+    The released emissions of all shards are merged into one
+    timestamp-ordered batch (``lax.sort`` with the flat lane index as the
+    tie-break — deterministic for any shard interleaving) before the store
+    ingest; evaluation replays the window ``[wm - range, wm)`` at the
+    global watermark.  Returns the streaming port tuple + new state,
+    shaped like the single-shard event-time step.
+    """
+    from repro.core import eventtime as _et
+    from repro.core import panestore as _ps
+    w = q.window
+    rspec = w.reorder_spec()
+    spec = w.store_spec()
+    rstates, pstate = state
+
+    n = groups.shape[-1]
+    groups = groups.astype(jnp.int32)
+    keys = jnp.asarray(keys, pstate.keys.dtype)
+    ts = jnp.asarray(timestamps, jnp.int32)
+    gs, ks = partition_stream(groups, keys, num_shards)
+    tss = ts.reshape(num_shards, n // num_shards)
+    length = n // num_shards
+    nvs = None
+    live = jnp.ones((num_shards, length), bool)
+    if n_valid is not None:
+        nvs = jnp.clip(n_valid - jnp.arange(num_shards) * length, 0, length)
+        live = jnp.arange(length)[None, :] < nvs[:, None]
+
+    # the release gate: every shard's post-push watermark, min-merged —
+    # computed up front (cheap max) so this push's releases already respect
+    # the other shards' progress.  Lateness is judged against the *previous*
+    # push's merged watermark: the contiguous slicing hands one shard the
+    # tail of every batch (inflated local maximum), and a tuple is only
+    # unrecoverable once an already-emitted evaluation has passed it.
+    prev_wm = _et.merge_watermarks(rstates.max_ts - w.max_lateness)
+    new_max = jnp.maximum(rstates.max_ts,
+                          jnp.max(jnp.where(live, tss, _et.TS_MIN), axis=-1))
+    global_wm = _et.merge_watermarks(new_max - w.max_lateness)
+
+    if nvs is None:
+        def shard_push(rst, t, g, k):
+            return _et.reorder_push(rspec, rst, t, g, k,
+                                    release_wm=prev_wm, late_wm=prev_wm,
+                                    drain_wm=global_wm)
+        emits, rstates = jax.vmap(shard_push)(rstates, tss, gs, ks)
+    else:
+        def shard_push(rst, t, g, k, nv):
+            return _et.reorder_push(rspec, rst, t, g, k, n_valid=nv,
+                                    release_wm=prev_wm, late_wm=prev_wm,
+                                    drain_wm=global_wm)
+        emits, rstates = jax.vmap(shard_push)(rstates, tss, gs, ks, nvs)
+
+    sg, sk, sts, slive = merge_emissions(emits)
+    pstate = _ps.push_time(spec, pstate, sg, sk, sts, live=slive,
+                           retire_below=global_wm - w.range)
+    g, values, valid, num = _ps.replay(spec, pstate, q.ops,
+                                       interpolate=q.interpolate,
+                                       eval_time=global_wm)
+    rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
+    return (g, values, valid, num, rr), (rstates, pstate)
+
+
+def merge_emissions(emits):
+    """Flatten stacked per-shard :class:`repro.core.eventtime.ReorderEmit`
+    batches into one timestamp-ordered stream (dead lanes sort to the
+    tail; the flat lane index breaks timestamp ties deterministically).
+    Returns ``(groups, keys, ts, live)``."""
+    e_ts = emits.ts.reshape(-1)
+    e_g = emits.groups.reshape(-1)
+    e_k = emits.keys.reshape(-1)
+    e_live = emits.live.reshape(-1)
+    big = jnp.iinfo(jnp.int32).max
+    ts_key = jnp.where(e_live, e_ts, big)
+    lane = jnp.arange(e_ts.shape[0], dtype=jnp.int32)
+    sts, _, sg, sk, sl = jax.lax.sort(
+        (ts_key, lane, e_g, e_k, e_live.astype(jnp.int32)), num_keys=2)
+    slive = sl == 1
+    return sg, sk, jnp.where(slive, sts, 0), slive
+
 
 def stream_push_sharded(q, groups, keys, carries, combiners, *,
                         num_shards, mesh=None, n_valid=None,

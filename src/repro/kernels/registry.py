@@ -76,6 +76,13 @@ def _pallas_window_common(q) -> str | None:
 def _pallas_supports(q) -> str | None:
     if q.streaming:
         return "streaming carries are a reference-backend feature"
+    if q.window is not None and q.window.is_time:
+        # both time strategies have a kernel rendering: replay frames run
+        # the fused sort+tails kernel, the two-stack runs the stack-flip
+        # kernel — strategy eligibility is the planner's check
+        if q.interpolate:
+            return "pallas median is lower-median only (interpolate=False)"
+        return None
     if q.window is not None:
         common = _pallas_window_common(q)
         if common is not None:
@@ -98,6 +105,10 @@ def _pallas_supports(q) -> str | None:
 def _pallas_panes_supports(q) -> str | None:
     if q.window is None:
         return "pane kernels are a windowed-query backend"
+    if q.window.is_time:
+        return ("time-range windows re-frame by timestamp (no shared "
+                "count-panes to sort once); use the pallas or reference "
+                "backend")
     if q.streaming:
         return "streaming carries are a reference-backend feature"
     common = _pallas_window_common(q)

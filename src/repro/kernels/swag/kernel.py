@@ -270,6 +270,56 @@ def pergroup_replay_pallas(run_keys, run_valid, ops, *, run: int,
     return {name: o[:, 0] for name, o in zip(names, outs)}
 
 
+def _twostack_kernel(kf_ref, vf_ref, kb_ref, vb_ref, *out_refs, names):
+    """The stack-flip step of the flip-batched two-stack SWAG, one epoch per
+    grid row: an inclusive suffix scan over the epoch's front region and an
+    inclusive prefix scan over its back region (masked lanes pinned to each
+    op's identity) — the flip of Tangwongsan et al.'s two-stack algorithm
+    as log2(wcap) Hillis–Steele sweeps in VMEM.  The scan body is the
+    *same* code the reference strategy runs batched
+    (:func:`repro.core.twostack.flip_scans`)."""
+    from repro.core import twostack as _twostack
+
+    kf, vf = kf_ref[0, :], vf_ref[0, :] != 0
+    kb, vb = kb_ref[0, :], vb_ref[0, :] != 0
+    scans = _twostack.flip_scans(kf, vf, kb, vb, names, kf.dtype)
+    for i, name in enumerate(names):
+        fsuf, bpre = scans[name]
+        out_refs[2 * i][0, :] = fsuf
+        out_refs[2 * i + 1][0, :] = bpre
+
+
+def _state_dtype(name: str, key_dtype):
+    comb = get_combiner(name)
+    return jax.eval_shape(lambda x: comb.lift(x),
+                          jax.ShapeDtypeStruct((1,), key_dtype)).dtype
+
+
+def twostack_flip_pallas(kf, vf, kb, vb, names, *, interpret: bool):
+    """Batched flip over ``[NE, wcap]`` epoch regions (see
+    :mod:`repro.core.twostack`).  ``kf``/``kb`` are the front/back key
+    slices, ``vf``/``vb`` their liveness masks.  Returns
+    ``{name: (front_suffix, back_prefix)}``, each ``[NE, wcap]``."""
+    ne, wcap = kf.shape
+    names = tuple(names)
+    kern = functools.partial(_twostack_kernel, names=names)
+    block = pl.BlockSpec((1, wcap), lambda i: (i, 0))
+    out_shape = []
+    for name in names:
+        dt = _state_dtype(name, kf.dtype)
+        out_shape += [jax.ShapeDtypeStruct((ne, wcap), dt)] * 2
+    outs = pl.pallas_call(
+        kern,
+        grid=(ne,),
+        in_specs=[block] * 4,
+        out_specs=[block] * (2 * len(names)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(kf, vf.astype(jnp.int32), kb, vb.astype(jnp.int32))
+    return {name: (outs[2 * i], outs[2 * i + 1])
+            for i, name in enumerate(names)}
+
+
 def swag_pallas(frames_g, frames_k, ops, *, interpret: bool):
     """frames_*: [NW, WS] framed windows, WS a power of two.  ``ops`` is one
     op name or a tuple (fused multi-op: one sort, N tails).  Returns

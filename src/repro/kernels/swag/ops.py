@@ -85,6 +85,36 @@ def _swag_kernel_exec(groups, keys, *, ws: int, wa: int, ops,
     return og, ovs, valid, oc
 
 
+@functools.partial(jax.jit, static_argnames=("ops", "interpret"))
+def _timeframe_kernel_exec(frames_g, frames_k, *, ops,
+                           interpret: bool | None = None):
+    """Fused Pallas tail for **time-range windows** (the replay strategy):
+    the event-time layer has already framed the ts-sorted stream into
+    ``[NW, wcap]`` rows (``repro.core.eventtime.frame_time_windows``;
+    variable tuple counts, dead lanes PAD-masked), so each grid row runs
+    the same in-VMEM sort + multi-op tail as :func:`_swag_kernel_exec`'s
+    re-sort path.  Returns ``(og, {name: ov}, valid, oc)``."""
+    interpret = _common.default_interpret(interpret)
+    from repro.kernels.swag import kernel as _k
+
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
+    nw, wcap = frames_g.shape
+    if wcap & (wcap - 1):
+        raise ValueError(f"time frames must be power-of-two wide, "
+                         f"got {wcap}")
+    if nw == 0:
+        return (jnp.full((0, wcap), PAD_GROUP, jnp.int32),
+                {name: jnp.zeros((0, wcap),
+                                 _k._out_dtype(name, frames_k.dtype))
+                 for name in names},
+                jnp.zeros((0, wcap), bool), jnp.zeros((0,), jnp.int32))
+    og, ovs, oc = _k.swag_pallas(frames_g.astype(jnp.int32), frames_k,
+                                 names, interpret=interpret)
+    valid = jnp.arange(wcap)[None, :] < oc[:, None]
+    og = jnp.where(valid, og, PAD_GROUP)
+    return og, ovs, valid, oc
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "ops", "interpret"))
 def _swag_pergroup_kernel_exec(groups, keys, *, spec, ops,
                                interpret: bool | None = None):

@@ -87,6 +87,14 @@ class Window:
     forces / ``False`` suppresses); the kernel backends encode the choice in
     the backend name (``pallas`` re-sorts, ``pallas-panes`` shares panes).
 
+    ``wa > ws`` is allowed and means **sampling**: one window of the last
+    ``ws`` tuples per ``wa``-tuple advance, so the ``wa - ws`` tuples
+    between consecutive windows are never aggregated.  This is the natural
+    reading of the (WS, WA) pair — each window still covers exactly the
+    ``ws`` tuples before its advance boundary — and matches what the
+    framing (:func:`repro.core.swag.frame_windows`) always did; it is a
+    deliberate gap, not an error.
+
     ``ws_per_group`` selects the paper's **per-group-window approximation**
     (the last ``WS_g`` tuples *of each group*, served from the shared
     evicting pane store — :mod:`repro.core.panestore`).  It is either a
@@ -99,14 +107,84 @@ class Window:
     globally oldest pane is evicted and the victim group's effective
     window shrinks — the approximation the paper trades for hash-free,
     DRAM-free state.
+
+    **Event-time clause** — ``Window(range=R, slide=S)`` (mutually
+    exclusive with ``ws``/``ws_per_group``/``panes``): windows are
+    *time-bounded*, covering ``[e - R, e)`` for evaluation times ``e`` at
+    multiples of ``S`` (``slide=None`` means tumbling, ``S = R``;
+    ``S > R`` samples, leaving time gaps — same semantics as ``wa > ws``).
+    Tuples carry explicit timestamps (``execute(..., timestamps=...)``)
+    and may arrive out of order within ``max_lateness`` time units of the
+    maximum seen timestamp: the streaming path re-sequences them through a
+    ``reorder_capacity``-slot bounded-lateness buffer and *drops* (flags,
+    never silently aggregates) anything later
+    (:mod:`repro.core.eventtime`).  Streaming time panes close and evict
+    by **watermark advance** (``wm = max_ts - max_lateness``), not tuple
+    count; ``wa`` becomes the tuple capacity of one pane slot (power of
+    two, default 8) and ``capacity`` the slot count of the shared store.
+    ``strategy`` picks the batch execution strategy: ``"replay"``
+    (re-aggregate each framed window — any op), ``"twostack"`` (the
+    flip-batched two-stack of :mod:`repro.core.twostack` — replay-free,
+    ungrouped :data:`repro.core.swag.PARTIAL_OPS` only), or ``None``
+    (auto: two-stack when eligible).
     """
-    ws: int
+    ws: int | None = None
     wa: int | None = None
     panes: bool | None = None
     ws_per_group: Any = None
     capacity: int | None = None
+    range: int | None = None
+    slide: int | None = None
+    max_lateness: int | None = None
+    reorder_capacity: int | None = None
+    strategy: str | None = None
 
     def __post_init__(self):
+        if self.capacity is not None and self.capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {self.capacity}")
+        if self.range is not None:
+            if self.ws is not None or self.ws_per_group is not None:
+                raise ValueError(
+                    "Window(range=...) is time-bounded — the tuple-count "
+                    "clauses ws / ws_per_group do not apply")
+            if self.panes is not None:
+                raise ValueError("panes is a count-window control; "
+                                 "time-range windows pick a strategy "
+                                 "(strategy='replay'|'twostack')")
+            if self.range <= 0:
+                raise ValueError(f"range must be positive, got {self.range}")
+            slide = self.range if self.slide is None else self.slide
+            if slide <= 0:
+                raise ValueError(f"slide must be positive, got {slide}")
+            object.__setattr__(self, "slide", slide)
+            wa = 8 if self.wa is None else self.wa
+            if wa <= 0 or wa & (wa - 1):
+                raise ValueError(f"time-mode wa (pane-slot tuple capacity) "
+                                 f"must be a positive power of two, got {wa}")
+            object.__setattr__(self, "wa", wa)
+            lateness = 0 if self.max_lateness is None else self.max_lateness
+            if lateness < 0:
+                raise ValueError(f"max_lateness must be >= 0, got {lateness}")
+            object.__setattr__(self, "max_lateness", lateness)
+            rc = 64 if self.reorder_capacity is None else self.reorder_capacity
+            if rc <= 0 or rc & (rc - 1):
+                raise ValueError(f"reorder_capacity must be a positive "
+                                 f"power of two, got {rc}")
+            object.__setattr__(self, "reorder_capacity", rc)
+            if self.strategy not in (None, "replay", "twostack"):
+                raise ValueError(f"strategy must be 'replay', 'twostack' or "
+                                 f"None, got {self.strategy!r}")
+            return
+        for val, nm in ((self.slide, "slide"),
+                        (self.max_lateness, "max_lateness"),
+                        (self.reorder_capacity, "reorder_capacity"),
+                        (self.strategy, "strategy")):
+            if val is not None:
+                raise ValueError(f"{nm} is an event-time parameter — it "
+                                 f"needs Window(range=...)")
+        if self.ws is None:
+            raise ValueError("Window needs ws (a tuple count) or "
+                             "range (a time span)")
         if self.ws <= 0:
             raise ValueError(f"ws must be positive, got {self.ws}")
         wa = self.ws if self.wa is None else self.wa
@@ -127,18 +205,30 @@ class Window:
                         f"{wpg!r}") from None
             wpg = tuple(sorted((int(g), int(w)) for g, w in pairs))
             object.__setattr__(self, "ws_per_group", wpg)
-        if self.capacity is not None and self.capacity <= 0:
-            raise ValueError(f"capacity must be positive, got {self.capacity}")
 
     @property
     def per_group(self) -> bool:
         return self.ws_per_group is not None
 
+    @property
+    def is_time(self) -> bool:
+        return self.range is not None
+
     def store_spec(self) -> "_panestore.PaneStoreSpec":
         """The pane-store configuration this window clause implies (also
         used for streaming *global*-window queries, where ``ws`` acts as
         every group's default per-group window — the paper's streaming
-        design point)."""
+        design point).  Time clauses yield a time-mode store (watermark
+        retirement; panes keyed by ``ts // slide``)."""
+        if self.is_time:
+            from repro.core.sorter import next_pow2
+            npanes = -(-self.range // self.slide) + 1
+            cap = self.capacity
+            if cap is None:
+                cap = next_pow2(max(16, 4 * npanes))
+            return _panestore.PaneStoreSpec(
+                wa=self.wa, capacity=cap, default_ws=1, per_group=(),
+                slide=self.slide, time_range=self.range)
         wpg = self.ws_per_group
         pairs = wpg if isinstance(wpg, tuple) else ()
         default = wpg if isinstance(wpg, int) else self.ws
@@ -147,6 +237,43 @@ class Window:
             cap = _panestore.default_capacity(self.wa, default, pairs)
         return _panestore.PaneStoreSpec(wa=self.wa, capacity=cap,
                                         default_ws=default, per_group=pairs)
+
+    def reorder_spec(self):
+        """The bounded-lateness reorder buffer this (time) clause implies."""
+        if not self.is_time:
+            raise ValueError("reorder buffers serve Window(range=...) only")
+        from repro.core import eventtime as _eventtime
+        return _eventtime.ReorderSpec(capacity=self.reorder_capacity,
+                                      max_lateness=self.max_lateness)
+
+
+def _twostack_reason(query: "Query") -> str | None:
+    """Why the two-stack strategy cannot serve ``query`` (None = it can)."""
+    from repro.core.swag import PARTIAL_OPS
+    if query.group_by:
+        return ("the flip-batched two-stack aggregates the whole stream "
+                "(group_by=False); grouped time windows take the replay "
+                "strategy")
+    bad = sorted(set(query.op_names) - set(PARTIAL_OPS))
+    if bad:
+        return (f"two-stack scans need single-array monoid states "
+                f"({sorted(PARTIAL_OPS)}); {bad} take the replay strategy")
+    return None
+
+
+def resolve_time_strategy(query: "Query") -> str:
+    """Resolve a time-window query's execution strategy (validating an
+    explicit ``Window(strategy=...)`` — never a silent fallback)."""
+    w = query.window
+    if w.strategy == "twostack":
+        reason = _twostack_reason(query)
+        if reason is not None:
+            raise ValueError(f"Window(strategy='twostack') cannot run this "
+                             f"query: {reason}")
+        return "twostack"
+    if w.strategy == "replay":
+        return "replay"
+    return "twostack" if _twostack_reason(query) is None else "replay"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,19 +368,31 @@ class Plan:
 def _validate_sharded(query: Query, backend: str, num_shards: int) -> None:
     """Reject queries whose states cannot merge across shards — at plan
     time, with the reason (never a silent wrong answer)."""
-    if query.window is not None and query.window.per_group:
+    w = query.window
+    if w is not None and w.per_group:
         raise ValueError(
             "per-group windows (Window(ws_per_group=...)) replay one shared "
             "evicting pane store — a sequential structure with no "
             "cross-shard merge; run them single-device")
-    if query.window is not None and query.streaming:
+    if w is not None and query.streaming and not w.is_time:
         raise ValueError(
             "streaming windowed queries thread one shared pane store as "
             "their carry and cannot shard; stream the non-windowed query "
             "per shard instead")
+    if w is not None and w.is_time and not query.streaming:
+        raise ValueError(
+            "batch time-range windows frame by concrete host-side "
+            "timestamps and run single-device; shard the streaming path "
+            "(Query(streaming=True)) instead — per-shard reorder buffers "
+            "release against the min-merged watermark")
     if query.presorted:
         raise ValueError("presorted conflicts with sharded execution — the "
                          "local phase sorts per shard/pane")
+    if w is not None and w.is_time:
+        # sharded event-time streaming merges *emissions* (per-shard
+        # reorder buffers feed one shared time-pane store), so any replay
+        # op works — the mergeable-combiner constraint does not apply
+        return
     for op, nm in zip(query.ops, query.op_names):
         if nm == "median":
             if query.streaming:
@@ -299,8 +438,14 @@ def plan(query: Query, *, backend: str | None = None, num_shards: int = 1,
     """
     if not isinstance(query, Query):
         raise TypeError(f"expected a Query, got {type(query).__name__}")
-    if query.window is not None and (query.window.per_group
-                                     or query.streaming):
+    if query.window is not None and query.window.is_time:
+        if query.presorted:
+            raise ValueError("presorted does not apply to time-range "
+                             "windows — they frame by timestamp")
+        resolve_time_strategy(query)  # explicit strategy validated now
+        query.window.store_spec()     # wa/capacity validated now
+    elif query.window is not None and (query.window.per_group
+                                       or query.streaming):
         # both the per-group batch path and every streaming windowed query
         # run on the shared pane store (streaming global windows are the
         # paper's approximation: ws becomes each group's default window)
@@ -315,7 +460,10 @@ def plan(query: Query, *, backend: str | None = None, num_shards: int = 1,
     names = query.op_names
     if query.interpolate and "median" not in names:
         raise ValueError("interpolate=True applies to the median op only")
-    if query.n_valid is not None and query.window is not None:
+    if query.n_valid is not None and query.window is not None \
+            and not (query.streaming and query.window.is_time):
+        # exception: event-time streaming pushes — the reorder buffer
+        # ingests a masked prefix per push
         raise ValueError("n_valid applies to non-windowed queries (windows "
                          "frame a dense stream)")
     for op in query.ops:
@@ -352,6 +500,11 @@ def plan(query: Query, *, backend: str | None = None, num_shards: int = 1,
             else "window" if query.window is not None
             else "engine")
     if path == "stream" and query.window is not None \
+            and query.window.is_time:
+        note = (note + "; " if note else "") + \
+            "event-time: panes close by watermark; evaluation at each " \
+            "push's watermark"
+    elif path == "stream" and query.window is not None \
             and not query.window.per_group:
         # NOT the batch semantics: a streamed global window runs on the
         # pane store, where ws becomes each group's default per-group
@@ -400,6 +553,47 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
         raise ValueError("stream_fn needs a streaming plan")
     q = p.query
 
+    if q.window is not None and q.window.is_time:
+        from repro.core import eventtime as _eventtime
+        spec = q.window.store_spec()
+        rspec = q.window.reorder_spec()
+        time_range = q.window.range
+        lateness = q.window.max_lateness
+
+        if p.num_shards > 1:
+            from repro.distributed import query_exec as _qx
+
+            def sharded_time_step(groups, keys, state, n_valid=None,
+                                  timestamps=None):
+                if timestamps is None:
+                    raise ValueError("event-time streaming pushes need "
+                                     "timestamps=")
+                return _qx.stream_push_eventtime_sharded(
+                    q, groups, keys, timestamps, state,
+                    num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
+                    p_ports=p_ports)
+
+            return sharded_time_step
+
+        def time_step(groups, keys, state, n_valid=None, timestamps=None):
+            if timestamps is None:
+                raise ValueError("event-time streaming pushes need "
+                                 "timestamps=")
+            rstate, pstate = state
+            emit, rstate = _eventtime.reorder_push(
+                rspec, rstate, timestamps, groups, keys, n_valid=n_valid)
+            wm = rstate.max_ts - lateness
+            pstate = _panestore.push_time(
+                spec, pstate, emit.groups, emit.keys, emit.ts,
+                live=emit.live, retire_below=wm - time_range)
+            g, values, valid, num = _panestore.replay(
+                spec, pstate, q.ops, interpolate=q.interpolate,
+                eval_time=wm)
+            rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
+            return (g, values, valid, num, rr), (rstate, pstate)
+
+        return time_step
+
     if p.num_shards > 1:
         from repro.distributed import query_exec as _qx
         combiners = _combiners(q)
@@ -435,9 +629,22 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
 
 
 def init_stream_state(p: Plan, key_dtype=jnp.int32):
-    """Fresh state for a streaming plan: per-op carries, or a pane store
-    when the query is windowed."""
+    """Fresh state for a streaming plan: per-op carries, a pane store when
+    the query is windowed, or ``(reorder buffer(s), time-pane store)`` for
+    event-time windows (sharded event-time plans stack one reorder buffer
+    per shard — each shard tracks its own watermark)."""
     from repro.core import segscan
+    if p.query.window is not None and p.query.window.is_time:
+        from repro.core import eventtime as _eventtime
+        rstate = _eventtime.init_reorder(p.query.window.reorder_spec(),
+                                         key_dtype)
+        if p.num_shards > 1:
+            rstate = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (p.num_shards,) + x.shape),
+                rstate)
+        return (rstate,
+                _panestore.init_store(p.query.window.store_spec(),
+                                      key_dtype))
     if p.query.window is not None:
         return _panestore.init_store(p.query.window.store_spec(), key_dtype)
     return tuple(segscan.init_carry(c, key_dtype)
@@ -531,6 +738,82 @@ def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
     return AggResult(r.groups, {name: r.values}, r.valid, r.num_groups)
 
 
+def _execute_time_window(p: Plan, groups, keys, timestamps, *,
+                         interpret):
+    """Batch execution of ``Window(range=..., slide=...)``: sort by
+    timestamp once (host-side layout — window count/width are shapes),
+    then either **replay** each framed window (any op; reference engine
+    rows or the fused Pallas sort+tails kernel) or run the flip-batched
+    **two-stack** (ungrouped PARTIAL_OPS; jnp scans or the Pallas
+    stack-flip kernel)."""
+    from repro.core import eventtime as _eventtime
+    from repro.kernels import common as _common
+    q = p.query
+    w = q.window
+    ts = _eventtime.concrete_timestamps(timestamps)
+    if ts.shape[0] != keys.shape[-1]:
+        raise ValueError(f"timestamps length {ts.shape[0]} != stream "
+                         f"length {keys.shape[-1]}")
+    layout = _eventtime.time_window_layout(ts, w.range, w.slide)
+    order = jnp.asarray(layout.order, jnp.int32)
+    gs = jnp.take(groups.astype(jnp.int32), order)
+    ks = jnp.take(keys, order)
+    strategy = resolve_time_strategy(q)
+    kernels = p.backend != "reference"
+    interp = _common.default_interpret(interpret) if kernels else False
+
+    if strategy == "twostack":
+        from repro.core import twostack as _twostack
+        epochs = _twostack.epoch_layout(layout.starts, layout.ends)
+        values, cnt = _twostack.twostack_time_windows(
+            ks, layout, epochs, q.op_names,
+            use_kernel=kernels, interpret=interp)
+        valid = (cnt > 0)[:, None]
+        og = jnp.where(valid, 0, _engine.PAD_GROUP)
+        values = {name: v[:, None] for name, v in values.items()}
+        return AggResult(og, values, valid, valid[:, 0].astype(jnp.int32))
+
+    fg, fk, cnt = _eventtime.frame_time_windows(layout, gs, ks,
+                                                _engine.PAD_GROUP)
+    if kernels:
+        from repro.kernels.swag.ops import _timeframe_kernel_exec
+        og, ovs, valid, num = _timeframe_kernel_exec(
+            fg, fk, ops=q.op_names, interpret=interpret)
+        return AggResult(og, ovs, valid, num)
+
+    names = q.op_names
+    non_median = tuple(op for op, nm in zip(q.ops, names) if nm != "median")
+
+    def row(g, k, c):
+        # PAD_GROUP sorts last, so the live lanes form the sorted prefix
+        # n_valid needs (the engine masks the PAD tail through it)
+        g2, k2 = jax.lax.sort((g, k), num_keys=2)
+        values = {}
+        shared = None
+        if non_median:
+            (og, vals, valid, num), _ = _engine.multi_engine_step(
+                g2, k2, non_median, n_valid=c)
+            values.update(vals)
+            shared = (og, valid, num)
+        if "median" in names:
+            t = _median_sorted_window(g2, k2, interpolate=q.interpolate,
+                                      n_valid=c)
+            values["median"] = t.medians
+            shared = shared or (t.groups, t.valid, t.num_groups)
+        return shared[0], values, shared[1], shared[2]
+
+    if layout.starts.shape[0] == 0:
+        wcap = layout.wcap
+        res = jax.eval_shape(row, jax.ShapeDtypeStruct((wcap,), jnp.int32),
+                             jax.ShapeDtypeStruct((wcap,), keys.dtype),
+                             jax.ShapeDtypeStruct((), jnp.int32))
+        zeros = jax.tree.map(
+            lambda s: jnp.zeros((0,) + s.shape, s.dtype), res)
+        return AggResult(*zeros)
+    og, values, valid, num = jax.vmap(row)(fg, fk, cnt)
+    return AggResult(og, values, valid, num)
+
+
 def _execute_sharded(p: Plan, groups, keys, n_valid, *, mesh, use_xla_sort,
                      interpret, tile):
     from repro.distributed import query_exec as _qx
@@ -550,7 +833,8 @@ def _execute_sharded(p: Plan, groups, keys, n_valid, *, mesh, use_xla_sort,
 
 
 def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
-            n_valid=None, mesh=None, num_shards: int | None = None,
+            n_valid=None, timestamps=None, mesh=None,
+            num_shards: int | None = None,
             use_xla_sort: bool = False, interpret: bool | None = None,
             tile: int = 1024):
     """Run a :class:`Query` (planned on the fly) or a prebuilt :class:`Plan`.
@@ -562,6 +846,10 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
       keys:   [N] value column.
       state: streaming queries only — carries from the previous call
         (``None`` starts a fresh stream).
+      timestamps: [N] event-time column — required by (and only accepted
+        with) ``Window(range=...)`` queries.  Batch execution frames
+        windows from the *concrete* values (call outside jit); streaming
+        pushes accept tracers (the watermark lives in the carry).
       backend: override the plan's backend (re-plans when it differs).
       n_valid: traced prefix-length override of ``query.n_valid``.
       mesh: a :class:`jax.sharding.Mesh` — run the two-phase
@@ -610,11 +898,24 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
 
     groups, keys, n_valid = _prepare_inputs(p.query, groups, keys, n_valid)
 
+    is_time = p.query.window is not None and p.query.window.is_time
+    if is_time and timestamps is None:
+        raise ValueError("Window(range=...) queries aggregate by event "
+                         "time; pass timestamps=")
+    if not is_time and timestamps is not None:
+        raise ValueError("timestamps apply to time-range windows "
+                         "(Window(range=...)) only")
+
     if p.path == "stream":
         if state is None:
             state = init_stream_state(p, keys.dtype)
-        (g, values, valid, num, _rr), new_state = stream_fn(p, mesh=mesh)(
-            groups, keys, state, n_valid)
+        step = stream_fn(p, mesh=mesh)
+        if is_time:
+            (g, values, valid, num, _rr), new_state = step(
+                groups, keys, state, n_valid, timestamps)
+        else:
+            (g, values, valid, num, _rr), new_state = step(
+                groups, keys, state, n_valid)
         return AggResult(g, values, valid, num), new_state
 
     if p.num_shards > 1:
@@ -625,8 +926,13 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
     if p.path == "window":
         if n_valid is not None:
             raise ValueError("n_valid applies to non-windowed queries")
-        res = _execute_window(p, groups, keys, use_xla_sort=use_xla_sort,
-                              interpret=interpret)
+        if is_time:
+            res = _execute_time_window(p, groups, keys, timestamps,
+                                       interpret=interpret)
+        else:
+            res = _execute_window(p, groups, keys,
+                                  use_xla_sort=use_xla_sort,
+                                  interpret=interpret)
     else:
         res = _execute_engine(p, groups, keys, n_valid, tile=tile,
                               interpret=interpret)

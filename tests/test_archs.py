@@ -1,6 +1,11 @@
 """Per-architecture smoke tests (deliverable f): reduced same-family config,
 one forward + one train step + one decode step on CPU; asserts shapes and
-finiteness."""
+finiteness.
+
+Marked ``slow`` wholesale: the LLM-architecture sweep is a seed leftover
+orthogonal to the aggregation engine, and compiling a train step per
+architecture dominates tier-1 wall-clock (deselect with ``-m "not slow"``).
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -9,6 +14,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, list_archs
+
+pytestmark = pytest.mark.slow
 from repro.configs.base import SHAPES, shape_applicable
 from repro.models import model as MDL
 from repro.optim import OptimizerConfig, adamw
