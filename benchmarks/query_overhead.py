@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from benchmarks.common import time_fn
 from repro.core import sorter as _sorter_mod
 from repro.core.swag import _swag, num_windows
+from repro.obs.export import to_jsonable
 from repro.query import Query, Window, execute, plan
 
 WS, WA, N = 1024, 256, 32768
@@ -93,6 +94,10 @@ def run() -> list[dict]:
     add("query/direct_call", us_direct)
     add("query/planned_execute", us_query,
         derived=f"overhead_vs_direct={us_query - us_direct:+.1f}us")
+    # one stats-collecting run outside the timed loop: the engine counters
+    # ride the tracked row so the exported JSONL carries them per PR
+    stats = execute(p1, g, k, use_xla_sort=True, collect_stats=True)[0].stats
+    rows[-1]["engine_stats"] = to_jsonable(stats)
 
     # --- multi-op fusion: one fused pass vs three single-op queries ------
     qm = Query(ops=OPS, window=Window(ws=WS, wa=WA))

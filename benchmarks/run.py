@@ -26,6 +26,11 @@ repo root — machine-readable (name, us_per_call, tuples_per_s) so the SWAG
 perf + dispatch-overhead + shard-scaling + event-time trajectory is tracked
 across PRs.
 
+Rows that carry ``engine_stats`` (collect_stats=True counters attached by
+the module) additionally land in ``BENCH_stats.jsonl`` together with the
+process-global MetricsRegistry snapshot — the observability sidecar the
+measured-cost router will consume.
+
 ``--only PREFIX`` runs the matching module(s) alone and merges their rows
 into the tracked json in place.
 """
@@ -42,13 +47,40 @@ _JSON_MODULES = ("swag_bench", "query_overhead", "shard_scaling",
                  "eventtime_bench")
 
 
+def _json_row(r: dict) -> dict:
+    row = {"name": r["name"],
+           "us_per_call": r["us_per_call"],
+           "tuples_per_s": r["tuples_per_s"]}
+    if "engine_stats" in r:
+        row["engine_stats"] = r["engine_stats"]
+    return row
+
+
 def _write_swag_json(rows: list[dict]) -> None:
-    payload = [{"name": r["name"],
-                "us_per_call": r["us_per_call"],
-                "tuples_per_s": r["tuples_per_s"]}
-               for r in rows if "tuples_per_s" in r]
+    payload = [_json_row(r) for r in rows if "tuples_per_s" in r]
     out = _REPO_ROOT / "BENCH_swag.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}", file=sys.stderr, flush=True)
+
+
+def _write_stats_jsonl(rows: list[dict]) -> None:
+    """Observability sidecar: every row that carries ``engine_stats``
+    lands in ``BENCH_stats.jsonl`` (one JSON object per line), followed
+    by the process-global :class:`~repro.obs.registry.MetricsRegistry`
+    snapshot — the observed (backend, plan) -> tuples/s cells the
+    measured-cost router will consume."""
+    from repro.obs import export as _export
+    from repro.obs import registry as _registry
+
+    records = [{"kind": "bench_row", **_json_row(r)}
+               for r in rows if "engine_stats" in r]
+    for (backend, plan), cell in _registry.get_registry().snapshot().items():
+        records.append({"kind": "observed_throughput", "backend": backend,
+                        "plan": plan, **cell})
+    if not records:
+        return
+    out = _REPO_ROOT / "BENCH_stats.jsonl"
+    _export.write_jsonl(records, out)
     print(f"# wrote {out}", file=sys.stderr, flush=True)
 
 
@@ -106,6 +138,7 @@ def main() -> None:
             _merge_swag_json(json_rows)
         else:
             _write_swag_json(json_rows)
+        _write_stats_jsonl(json_rows)
 
 
 def _merge_swag_json(rows: list[dict]) -> None:
@@ -115,10 +148,7 @@ def _merge_swag_json(rows: list[dict]) -> None:
         existing = json.loads(out.read_text())
     new_names = {r["name"] for r in rows}
     payload = [e for e in existing if e["name"] not in new_names]
-    payload += [{"name": r["name"],
-                 "us_per_call": r["us_per_call"],
-                 "tuples_per_s": r["tuples_per_s"]}
-                for r in rows if "tuples_per_s" in r]
+    payload += [_json_row(r) for r in rows if "tuples_per_s" in r]
     out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# merged into {out}", file=sys.stderr, flush=True)
 

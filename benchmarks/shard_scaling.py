@@ -42,6 +42,7 @@ def _child() -> list[dict]:
     from benchmarks.common import time_fn
     from repro.core import engine as _engine
     from repro.core.swag import num_windows
+    from repro.obs.export import to_jsonable
     from repro.query import Query, Window, execute, plan
 
     assert len(jax.devices()) >= max(SHARDS), jax.devices()
@@ -89,11 +90,16 @@ def _child() -> list[dict]:
                 f"combine tree of {want}"
         us = time_fn(fn, gs, ks, iters=10, warmup=2)
         tput = N / (us / 1e6)
+        # one stats-collecting run records the combine-tree telemetry the
+        # timed (stats-off) loop never traces: per-round partial-table
+        # widths are the byte cost the merge stage moves over the mesh
+        stats = execute(p, gs, ks, mesh=mesh, collect_stats=True)[0].stats
         rows.append({
             "name": f"shard_scaling/grouped_multiop/shards{s}",
             "us_per_call": round(us, 1),
             "tuples_per_s": tput,
             "derived": f"devices={s} tuples_per_s={tput:.3e}",
+            "engine_stats": to_jsonable(stats),
         })
 
         # -- SWAG ------------------------------------------------------------

@@ -166,7 +166,7 @@ def init_reorder(spec: ReorderSpec, key_dtype=jnp.int32) -> ReorderState:
 
 
 def _reorder_cycle(spec: ReorderSpec, st: ReorderState, t, g, k, lv,
-                   release_wm, late_wm=None):
+                   release_wm, late_wm=None, counters=None):
     """One in / at most one out.  The incoming tuple (dead when ``lv`` is
     False) first advances the watermark; a buffered (or the incoming)
     minimum-timestamp tuple is released when the watermark passes it —
@@ -225,7 +225,15 @@ def _reorder_cycle(spec: ReorderSpec, st: ReorderState, t, g, k, lv,
         seq_clock=st.seq_clock + do_ins.astype(jnp.int32),
         dropped=st.dropped + late.astype(jnp.int32),
     )
-    return new, (et, eg, ek, ev, late)
+    if counters is None:
+        return new, (et, eg, ek, ev, late)
+    from repro.obs import counters as _c
+    forced = (pop_inc & (t > release)) | (pop_buf & (mts > release))
+    counters = _c.bump(counters, "reorder_forced_pops",
+                       forced.astype(jnp.int32))
+    counters = _c.high_water(counters, "reorder_depth_hwm",
+                             jnp.sum(new.occ.astype(jnp.int32)))
+    return new, (et, eg, ek, ev, late), counters
 
 
 def _reorder_drain(spec: ReorderSpec, state: ReorderState, release: Array
@@ -259,8 +267,8 @@ def reorder_push(spec: ReorderSpec, state: ReorderState, ts: Array,
                  n_valid: Array | None = None,
                  release_wm: Array | None = None,
                  late_wm: Array | None = None,
-                 drain_wm: Array | None = None
-                 ) -> tuple[ReorderEmit, ReorderState]:
+                 drain_wm: Array | None = None,
+                 counters=None):
     """Stream one batch through the reorder buffer: a ``lax.scan`` of the
     one-in/one-out cycle, then a drain of everything else the final
     watermark has passed (so after every push the released set is exactly
@@ -277,7 +285,11 @@ def reorder_push(spec: ReorderSpec, state: ReorderState, ts: Array,
     once after the whole batch is buffered (defaults to ``release_wm``,
     then to the post-push local watermark).  ``late_wm`` overrides the
     late-drop threshold (the sharded path passes the previous push's
-    merged watermark — see :func:`_reorder_cycle`)."""
+    merged watermark — see :func:`_reorder_cycle`).
+
+    With ``counters`` (an :mod:`repro.obs.counters` dict) returns
+    ``(emit, state, counters)``, recording the buffer-depth high-water
+    mark and capacity-forced pops across every cycle of the push."""
     ts = jnp.asarray(ts, jnp.int32)
     groups = jnp.asarray(groups, jnp.int32)
     keys = jnp.asarray(keys, state.val.dtype)
@@ -285,12 +297,27 @@ def reorder_push(spec: ReorderSpec, state: ReorderState, ts: Array,
     live = (jnp.ones((n,), bool) if n_valid is None
             else jnp.arange(n) < n_valid)
 
-    def step(st, x):
-        t, g, k, lv = x
-        return _reorder_cycle(spec, st, t, g, k, lv, release_wm, late_wm)
+    if counters is None:
+        def step(st, x):
+            t, g, k, lv = x
+            return _reorder_cycle(spec, st, t, g, k, lv, release_wm, late_wm)
 
-    state, (ets, egs, eks, evs, lates) = jax.lax.scan(
-        step, state, (ts, groups, keys, live))
+        state, (ets, egs, eks, evs, lates) = jax.lax.scan(
+            step, state, (ts, groups, keys, live))
+    else:
+        from repro.obs import counters as _c
+        counters = _c.ensure(counters, ("reorder_depth_hwm",
+                                        "reorder_forced_pops"))
+
+        def step(carry, x):
+            st, cnt = carry
+            t, g, k, lv = x
+            st, out, cnt = _reorder_cycle(spec, st, t, g, k, lv, release_wm,
+                                          late_wm, counters=cnt)
+            return (st, cnt), out
+
+        (state, counters), (ets, egs, eks, evs, lates) = jax.lax.scan(
+            step, (state, counters), (ts, groups, keys, live))
     gate = drain_wm if drain_wm is not None else release_wm
     release = state.max_ts - spec.max_lateness if gate is None else gate
     drain, state = _reorder_drain(spec, state, release)
@@ -300,7 +327,9 @@ def reorder_push(spec: ReorderSpec, state: ReorderState, ts: Array,
         jnp.concatenate([eks, drain.keys]),
         jnp.concatenate([evs, drain.live]),
         jnp.concatenate([lates, drain.late]))
-    return emit, state
+    if counters is None:
+        return emit, state
+    return emit, state, counters
 
 
 def reorder_flush(spec: ReorderSpec, state: ReorderState

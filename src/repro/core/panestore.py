@@ -214,10 +214,14 @@ def init_store(spec: PaneStoreSpec, key_dtype=jnp.int32) -> PaneStoreState:
 
 
 def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
-              live: Array) -> PaneStoreState:
+              live: Array, counters=None):
     """Absorb one tuple (no-op when ``live`` is False) — the store's unit of
     worst-case-constant work: locate the open pane via the index, append,
     sort-on-close, retire dead panes, evict the globally oldest on overflow.
+
+    With ``counters`` (an :mod:`repro.obs.counters` dict) returns
+    ``(state, counters)`` recording evictions and the occupancy high-water
+    mark; ``None`` (the default) traces exactly the pre-observability ops.
     """
     c, wa = spec.capacity, spec.wa
     g = g.astype(jnp.int32)
@@ -269,31 +273,57 @@ def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
     new_count = jnp.where(dead, 0, new_count)
     new_stamp = jnp.where(dead, -1, new_stamp)
 
-    return PaneStoreState(new_owner, new_keys, new_seqs, new_count,
-                          new_base, new_stamp, clock)
+    new_state = PaneStoreState(new_owner, new_keys, new_seqs, new_count,
+                               new_base, new_stamp, clock)
+    if counters is None:
+        return new_state
+    from repro.obs import counters as _c
+    evicted = live & ~has_open & ~any_free
+    counters = _c.bump(counters, "pane_evictions", evicted.astype(jnp.int32))
+    counters = _c.high_water(counters, "pane_occupancy_hwm",
+                             jnp.sum((new_owner != PAD_GROUP)
+                                     .astype(jnp.int32)))
+    return new_state, counters
 
 
 def push(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
-         keys: Array, n_valid: Array | None = None) -> PaneStoreState:
+         keys: Array, n_valid: Array | None = None, counters=None):
     """Stream one batch of tuples through the store (a ``lax.scan`` of the
     constant-work single-tuple step — the software rendering of the
-    hardware's one-tuple-per-cycle ingest)."""
+    hardware's one-tuple-per-cycle ingest).
+
+    With ``counters`` returns ``(state, counters)``; the counters ride the
+    scan carry, so eviction counts and the occupancy high-water mark cover
+    every intermediate cycle, not just the batch boundary."""
     groups = jnp.asarray(groups, jnp.int32)
     keys = jnp.asarray(keys, state.keys.dtype)
     n = groups.shape[-1]
     live = jnp.ones((n,), bool) if n_valid is None else jnp.arange(n) < n_valid
 
-    def step(st, x):
-        g, k, lv = x
-        return _push_one(spec, st, g, k, lv), None
+    if counters is None:
+        def step(st, x):
+            g, k, lv = x
+            return _push_one(spec, st, g, k, lv), None
 
-    state, _ = jax.lax.scan(step, state, (groups, keys, live))
-    return state
+        state, _ = jax.lax.scan(step, state, (groups, keys, live))
+        return state
+
+    from repro.obs import counters as _c
+    counters = _c.ensure(counters, ("pane_evictions", "pane_occupancy_hwm"))
+
+    def step(carry, x):
+        st, cnt = carry
+        g, k, lv = x
+        return _push_one(spec, st, g, k, lv, counters=cnt), None
+
+    (state, counters), _ = jax.lax.scan(step, (state, counters),
+                                        (groups, keys, live))
+    return state, counters
 
 
 def _push_one_time(spec: PaneStoreSpec, st: PaneStoreState, g: Array,
                    k: Array, t: Array, lv: Array,
-                   retire_below: Array) -> PaneStoreState:
+                   retire_below: Array, counters=None):
     """Absorb one timestamped tuple (time mode).  Pane identity is the time
     pane ``t // slide`` (stored in ``base``); the timestamp rides the pane
     sort as the ``seqs`` payload; a pane whose whole interval has fallen
@@ -348,18 +378,28 @@ def _push_one_time(spec: PaneStoreSpec, st: PaneStoreState, g: Array,
     new_count = jnp.where(dead, 0, new_count)
     new_stamp = jnp.where(dead, -1, new_stamp)
 
-    return PaneStoreState(new_owner, new_keys, new_seqs, new_count,
-                          new_base, new_stamp, clock)
+    new_state = PaneStoreState(new_owner, new_keys, new_seqs, new_count,
+                               new_base, new_stamp, clock)
+    if counters is None:
+        return new_state
+    from repro.obs import counters as _c
+    evicted = lv & ~has_open & ~any_free
+    counters = _c.bump(counters, "pane_evictions", evicted.astype(jnp.int32))
+    counters = _c.high_water(counters, "pane_occupancy_hwm",
+                             jnp.sum((new_owner != PAD_GROUP)
+                                     .astype(jnp.int32)))
+    return new_state, counters
 
 
 def push_time(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
               keys: Array, ts: Array, live: Array | None = None,
-              retire_below: Array | None = None) -> PaneStoreState:
+              retire_below: Array | None = None, counters=None):
     """Stream one batch of timestamped tuples through a time-mode store.
 
     ``live`` is a full per-lane mask (reorder-buffer emissions are not a
     valid prefix); ``retire_below`` the retirement horizon, normally
-    ``watermark - time_range`` (``None`` retires nothing).
+    ``watermark - time_range`` (``None`` retires nothing).  With
+    ``counters`` returns ``(state, counters)`` (see :func:`push`).
     """
     if not spec.is_time:
         raise ValueError("push_time needs a time-mode PaneStoreSpec "
@@ -374,12 +414,25 @@ def push_time(spec: PaneStoreSpec, state: PaneStoreState, groups: Array,
     rb = (jnp.full((), TS_FLOOR, jnp.int32) if retire_below is None
           else jnp.asarray(retire_below, jnp.int32))
 
-    def step(st, x):
-        g, k, t, v = x
-        return _push_one_time(spec, st, g, k, t, v, rb), None
+    if counters is None:
+        def step(st, x):
+            g, k, t, v = x
+            return _push_one_time(spec, st, g, k, t, v, rb), None
 
-    state, _ = jax.lax.scan(step, state, (groups, keys, ts, lv))
-    return state
+        state, _ = jax.lax.scan(step, state, (groups, keys, ts, lv))
+        return state
+
+    from repro.obs import counters as _c
+    counters = _c.ensure(counters, ("pane_evictions", "pane_occupancy_hwm"))
+
+    def step(carry, x):
+        st, cnt = carry
+        g, k, t, v = x
+        return _push_one_time(spec, st, g, k, t, v, rb, counters=cnt), None
+
+    (state, counters), _ = jax.lax.scan(step, (state, counters),
+                                        (groups, keys, ts, lv))
+    return state, counters
 
 
 class ReplayRuns(NamedTuple):

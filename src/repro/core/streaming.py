@@ -23,7 +23,7 @@ port rotation across the whole stream.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,11 @@ class StreamResult(NamedTuple):
     valid: Array       # [N+1]
     num_groups: Array  # scalar
     rr_port: Array     # [N+1] round-robin output port (-1 where invalid)
+    #: engine telemetry — always carries ``late_dropped`` for event-time
+    #: windows (the lateness-contract violation counter lives in the carry
+    #: anyway); the full counters dict with ``collect_stats=True``; None
+    #: otherwise
+    stats: Any = None
 
 
 def stream_push(groups: Array, keys: Array, carries, combiners, *,
@@ -205,11 +210,16 @@ class StreamingAggregator:
     array), each shard reduces its slice to a partial table, the combine
     tree merges them, and the rolling carry folds in at emit time —
     bit-identical slots to the single-device aggregator.
+
+    ``collect_stats=True`` threads an :mod:`repro.obs.counters` dict
+    through the carry and surfaces it (cumulative over the stream's
+    lifetime) as ``StreamResult.stats`` on every push; the default traces
+    exactly the pre-observability computation.
     """
 
     def __init__(self, op="sum", *, window=None, key_dtype=jnp.int32,
                  p_ports: int = 4, num_shards: int | None = None,
-                 mesh=None):
+                 mesh=None, collect_stats: bool = False):
         from repro import query as _q
         self.combiner = op if isinstance(op, Combiner) else get_combiner(op)
         self.window = window
@@ -223,13 +233,34 @@ class StreamingAggregator:
             num_shards = mesh_shards
         self.num_shards = num_shards or 1
         self.mesh = mesh
+        self.collect_stats = bool(collect_stats)
         self.plan = _q.plan(
             _q.Query(ops=(self.combiner,), window=window, streaming=True),
             backend="reference", num_shards=self.num_shards)
-        self.carry = _q.init_stream_state(self.plan, key_dtype)
+        self.carry = _q.init_stream_state(self.plan, key_dtype,
+                                          collect_stats=self.collect_stats)
         self.p_ports = p_ports
         self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports,
-                                          mesh=mesh))
+                                          mesh=mesh,
+                                          collect_stats=self.collect_stats))
+
+    def _base_carry(self):
+        """The engine state, unwrapped from the (state, counters) pair the
+        stats-collecting carry threads."""
+        return self.carry[0] if self.collect_stats else self.carry
+
+    def _stats(self):
+        """The stats to surface on a result: the cumulative counters dict
+        when collecting; for event-time windows always at least the
+        late-drop counter (it lives in the carry — reading it is free)."""
+        if self.collect_stats:
+            return dict(self.carry[1])
+        if self.window is not None and self.window.is_time:
+            rstate = self._base_carry()[0]
+            dropped = (jnp.sum(rstate.dropped) if self.num_shards > 1
+                       else rstate.dropped)
+            return {"late_dropped": dropped}
+        return None
 
     def push(self, groups: Array, keys: Array,
              n_valid: Array | None = None,
@@ -259,19 +290,22 @@ class StreamingAggregator:
         else:
             (g, values, valid, num, rr), self.carry = self._step(
                 groups, keys, self.carry, n_valid)
-        return StreamResult(g, values[self.combiner.name], valid, num, rr)
+        return StreamResult(g, values[self.combiner.name], valid, num, rr,
+                            self._stats())
 
     def flush(self) -> StreamResult:
         """Close the stream: emit the open group (windowed: re-emit every
         live group's current window; event-time: drain the reorder
         buffer(s) and evaluate past the last tuple), reset the carry."""
         from repro import query as _q
+        carry = self._base_carry()
+        stats = self._stats()
         if self.window is not None and self.window.is_time:
             from repro.core import eventtime as _eventtime
             from repro.core import panestore as _ps
             rspec = self.window.reorder_spec()
             spec = self.window.store_spec()
-            rstate, pstate = self.carry
+            rstate, pstate = carry
             if self.num_shards > 1:
                 from repro.distributed import query_exec as _qx
                 emits, rstate = jax.vmap(
@@ -288,29 +322,33 @@ class StreamingAggregator:
                 spec, pstate, (self.combiner,), eval_time=end + 1)
             rr = jnp.where(valid, jnp.arange(spec.capacity) % self.p_ports,
                            -1)
-            self.carry = _q.init_stream_state(self.plan, pstate.keys.dtype)
+            self.carry = _q.init_stream_state(
+                self.plan, pstate.keys.dtype,
+                collect_stats=self.collect_stats)
             return StreamResult(g, values[self.combiner.name], valid, num,
-                                rr)
+                                rr, stats)
         if self.window is not None:
             from repro.core import panestore as _ps
             spec = self.window.store_spec()
             g, values, valid, num = _ps.replay(
-                spec, self.carry, (self.combiner,))
+                spec, carry, (self.combiner,))
             rr = jnp.where(valid, jnp.arange(spec.capacity) % self.p_ports,
                            -1)
-            self.carry = _q.init_stream_state(self.plan,
-                                              self.carry.keys.dtype)
+            self.carry = _q.init_stream_state(
+                self.plan, carry.keys.dtype,
+                collect_stats=self.collect_stats)
             return StreamResult(g, values[self.combiner.name], valid, num,
-                                rr)
-        (c,) = self.carry
+                                rr, stats)
+        (c,) = carry
         value = self.combiner.finalize(jax.tree.map(jnp.asarray, c.state))
         groups = jnp.where(c.nonempty, c.group, _engine.PAD_GROUP)[None]
         values = jnp.where(c.nonempty, value, jnp.zeros((), value.dtype))[None]
         valid = c.nonempty[None]
         num = c.nonempty.astype(jnp.int32)
         rr = jnp.where(valid, c.emitted % self.p_ports, -1)
-        self.carry = (segscan.init_carry(
-            self.combiner,
+        self.carry = _q.init_stream_state(
+            self.plan,
             jax.tree.leaves(c.state)[0].dtype
-            if jax.tree.leaves(c.state) else jnp.int32),)
-        return StreamResult(groups, values, valid, num, rr)
+            if jax.tree.leaves(c.state) else jnp.int32,
+            collect_stats=self.collect_stats)
+        return StreamResult(groups, values, valid, num, rr, stats)

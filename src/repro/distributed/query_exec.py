@@ -105,14 +105,21 @@ def _map_shards(fn, mesh, args):
                              out_specs=spec)(*args)
 
 
-def combine_tree(tables: _engine.PartialTable, ops, *, key_dtype
-                 ) -> _engine.PartialTable:
+def combine_tree(tables: _engine.PartialTable, ops, *, key_dtype,
+                 counters=None):
     """Merge stacked per-shard tables (leading axis = shard) down to one —
     log2(S) rounds of pairwise merges, widths doubling each round.
 
     Shard counts that are not powers of two are padded with
     :func:`repro.core.engine.empty_partial_table` (the merge identity), so
     the tree stays balanced and every round is one ``vmap``'d node type.
+
+    With ``counters`` (an :mod:`repro.obs.counters` dict) returns
+    ``(table, counters)``, recording per round: the merged table row width
+    (static — the additive-growth hypothesis from the ROADMAP, measured),
+    the live groups summed over the round's nodes (dynamic), and the bytes
+    of partial-table state the round's merges produced (static — a proxy
+    for cross-device traffic).
     """
     s = tables.groups.shape[0]
     width = tables.groups.shape[1]
@@ -124,6 +131,9 @@ def combine_tree(tables: _engine.PartialTable, ops, *, key_dtype
         tables = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b]), tables, pad)
         s = s2
+    round_width: list = []
+    round_groups: list = []
+    round_bytes: list = []
     while s > 1:
         a = jax.tree.map(lambda x: x[0::2], tables)   # earlier ranges
         b = jax.tree.map(lambda x: x[1::2], tables)
@@ -131,7 +141,26 @@ def combine_tree(tables: _engine.PartialTable, ops, *, key_dtype
             lambda ta, tb: _engine.combine_partial_tables(
                 ta, tb, ops, key_dtype=key_dtype))(a, b)
         s //= 2
-    return jax.tree.map(lambda x: x[0], tables)
+        if counters is not None:
+            round_width.append(tables.groups.shape[1])
+            round_groups.append(jnp.sum(tables.num_groups))
+            round_bytes.append(sum(x.size * x.dtype.itemsize
+                                   for x in jax.tree_util.tree_leaves(tables)
+                                   if hasattr(x, "dtype")))
+    out = jax.tree.map(lambda x: x[0], tables)
+    if counters is None:
+        return out
+    from repro.obs import counters as _c
+    counters = _c.put(counters, "combine_rounds",
+                      jnp.asarray(len(round_width), jnp.int32))
+    counters = _c.put(counters, "combine_round_width",
+                      jnp.asarray(round_width, jnp.int32))
+    counters = _c.put(counters, "combine_round_groups",
+                      (jnp.stack(round_groups) if round_groups
+                       else jnp.zeros((0,), jnp.int32)))
+    counters = _c.put(counters, "combine_round_bytes",
+                      jnp.asarray(round_bytes, jnp.float32))
+    return out, counters
 
 
 def _trim_table(table: _engine.PartialTable, width: int
@@ -207,17 +236,20 @@ def _local_engine_tables(q, gs, ks, nvs, combiner_ops, mesh, backend, *,
 
 
 def _engine_sharded(q, groups, keys, n_valid, *, num_shards, mesh, backend,
-                    tile, interpret):
+                    tile, interpret, counters=None):
+    from repro.obs import trace as _trace
     names = q.op_names
     combiner_ops = tuple(op for op, nm in zip(q.ops, names) if nm != "median")
 
     n = groups.shape[-1]
     groups = groups.astype(jnp.int32)
-    if n_valid is not None:
-        # mask the tail up front so every shard slice keeps the engine's
-        # sorted-with-PAD-tail contract locally
-        groups = jnp.where(jnp.arange(n) < n_valid, groups, PAD_GROUP)
-    gs, ks = partition_stream(groups, keys, num_shards)
+    with _trace.span("partition") as sp:
+        if n_valid is not None:
+            # mask the tail up front so every shard slice keeps the engine's
+            # sorted-with-PAD-tail contract locally
+            groups = jnp.where(jnp.arange(n) < n_valid, groups, PAD_GROUP)
+        gs, ks = partition_stream(groups, keys, num_shards)
+        sp.attach((gs, ks))
     length = n // num_shards
     nvs = None
     if n_valid is not None:
@@ -226,15 +258,28 @@ def _engine_sharded(q, groups, keys, n_valid, *, num_shards, mesh, backend,
     values: dict = {}
     shared = None
     if combiner_ops:
-        tables = _local_engine_tables(q, gs, ks, nvs, combiner_ops, mesh,
-                                      backend, tile=tile, interpret=interpret)
-        table = combine_tree(tables, combiner_ops, key_dtype=keys.dtype)
-        # pow2 shard padding can leave the merged table wider than the
-        # stream; trim so every column matches the single-device layout
-        # (real groups never exceed the stream length)
-        table = _trim_table(table, n)
-        g_out, vals, valid, num = _engine.finalize_partial_table(
-            table, combiner_ops)
+        with _trace.span("local") as sp:
+            tables = _local_engine_tables(q, gs, ks, nvs, combiner_ops, mesh,
+                                          backend, tile=tile,
+                                          interpret=interpret)
+            sp.attach(tables)
+        with _trace.span("merge") as sp:
+            if counters is None:
+                table = combine_tree(tables, combiner_ops,
+                                     key_dtype=keys.dtype)
+            else:
+                table, counters = combine_tree(tables, combiner_ops,
+                                               key_dtype=keys.dtype,
+                                               counters=counters)
+            # pow2 shard padding can leave the merged table wider than the
+            # stream; trim so every column matches the single-device layout
+            # (real groups never exceed the stream length)
+            table = _trim_table(table, n)
+            sp.attach(table)
+        with _trace.span("finalize") as sp:
+            g_out, vals, valid, num = _engine.finalize_partial_table(
+                table, combiner_ops)
+            sp.attach((g_out, vals))
         values.update(vals)
         shared = (g_out, valid, num)
 
@@ -242,14 +287,18 @@ def _engine_sharded(q, groups, keys, n_valid, *, num_shards, mesh, backend,
         # run channel: the shard slices are adjacent ranges of the globally
         # (group, key)-sorted stream, so their bitonic merge reproduces the
         # exact input stream the single-device rank pick reads
-        mg, mk = merge_sorted_runs(*_pad_pow2_shards(gs, ks))
-        mg, mk = mg[:n], mk[:n]
-        t = _swag._median_sorted_window(mg, mk, interpolate=q.interpolate,
-                                        n_valid=n_valid)
+        with _trace.span("merge:runs") as sp:
+            mg, mk = merge_sorted_runs(*_pad_pow2_shards(gs, ks))
+            mg, mk = mg[:n], mk[:n]
+            t = _swag._median_sorted_window(mg, mk, interpolate=q.interpolate,
+                                            n_valid=n_valid)
+            sp.attach(t)
         values["median"] = jnp.where(t.valid, t.medians,
                                      jnp.zeros((), t.medians.dtype))
         shared = shared or (t.groups, t.valid, t.num_groups)
-    return shared[0], values, shared[1], shared[2]
+    if counters is None:
+        return shared[0], values, shared[1], shared[2]
+    return shared[0], values, shared[1], shared[2], counters
 
 
 # --------------------------------------------------------------------------
@@ -396,7 +445,7 @@ def _window_partitioned(q, groups, keys, *, num_shards, backend,
 
 def stream_push_eventtime_sharded(q, groups, keys, timestamps, state, *,
                                   num_shards, mesh=None, n_valid=None,
-                                  p_ports: int = 4):
+                                  p_ports: int = 4, counters=None):
     """One sharded event-time push: per-shard bounded-lateness reorder
     buffers (stacked leading axis — each shard tracks its own watermark),
     released against the **min-merged** global watermark
@@ -408,7 +457,9 @@ def stream_push_eventtime_sharded(q, groups, keys, timestamps, state, *,
     tie-break — deterministic for any shard interleaving) before the store
     ingest; evaluation replays the window ``[wm - range, wm)`` at the
     global watermark.  Returns the streaming port tuple + new state,
-    shaped like the single-shard event-time step.
+    shaped like the single-shard event-time step (plus the counters dict
+    when ``counters`` is given — reorder depth/forced pops reduced over
+    shards, pane-store evictions/occupancy, late drops, watermark lag).
     """
     from repro.core import eventtime as _et
     from repro.core import panestore as _ps
@@ -441,27 +492,57 @@ def stream_push_eventtime_sharded(q, groups, keys, timestamps, state, *,
                           jnp.max(jnp.where(live, tss, _et.TS_MIN), axis=-1))
     global_wm = _et.merge_watermarks(new_max - w.max_lateness)
 
+    per_shard = None
+    if counters is not None:
+        # fresh per-shard reorder counters each push; vmap batches them,
+        # and the cross-shard reduction below folds them into the carry
+        per_shard = {"reorder_depth_hwm": jnp.zeros((), jnp.int32),
+                     "reorder_forced_pops": jnp.zeros((), jnp.int32)}
+
     if nvs is None:
         def shard_push(rst, t, g, k):
             return _et.reorder_push(rspec, rst, t, g, k,
                                     release_wm=prev_wm, late_wm=prev_wm,
-                                    drain_wm=global_wm)
-        emits, rstates = jax.vmap(shard_push)(rstates, tss, gs, ks)
+                                    drain_wm=global_wm, counters=per_shard)
+        out = jax.vmap(shard_push)(rstates, tss, gs, ks)
     else:
         def shard_push(rst, t, g, k, nv):
             return _et.reorder_push(rspec, rst, t, g, k, n_valid=nv,
                                     release_wm=prev_wm, late_wm=prev_wm,
-                                    drain_wm=global_wm)
-        emits, rstates = jax.vmap(shard_push)(rstates, tss, gs, ks, nvs)
+                                    drain_wm=global_wm, counters=per_shard)
+        out = jax.vmap(shard_push)(rstates, tss, gs, ks, nvs)
+    if counters is None:
+        emits, rstates = out
+    else:
+        from repro.obs import counters as _c
+        emits, rstates, shard_cnt = out
+        counters = _c.high_water(counters, "reorder_depth_hwm",
+                                 jnp.max(shard_cnt["reorder_depth_hwm"]))
+        counters = _c.bump(counters, "reorder_forced_pops",
+                           jnp.sum(shard_cnt["reorder_forced_pops"]))
 
     sg, sk, sts, slive = merge_emissions(emits)
-    pstate = _ps.push_time(spec, pstate, sg, sk, sts, live=slive,
-                           retire_below=global_wm - w.range)
+    if counters is None:
+        pstate = _ps.push_time(spec, pstate, sg, sk, sts, live=slive,
+                               retire_below=global_wm - w.range)
+    else:
+        pstate, counters = _ps.push_time(spec, pstate, sg, sk, sts,
+                                         live=slive,
+                                         retire_below=global_wm - w.range,
+                                         counters=counters)
+        counters = _c.put(counters, "late_dropped", jnp.sum(rstates.dropped))
+        counters = _c.put(counters, "watermark", global_wm)
+        # how far the fastest shard runs ahead of the merged release gate —
+        # the skew the min-merge rule is absorbing
+        counters = _c.put(counters, "watermark_lag",
+                          jnp.max(new_max - w.max_lateness) - global_wm)
     g, values, valid, num = _ps.replay(spec, pstate, q.ops,
                                        interpolate=q.interpolate,
                                        eval_time=global_wm)
     rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
-    return (g, values, valid, num, rr), (rstates, pstate)
+    if counters is None:
+        return (g, values, valid, num, rr), (rstates, pstate)
+    return (g, values, valid, num, rr), (rstates, pstate), counters
 
 
 def merge_emissions(emits):
@@ -484,12 +565,14 @@ def merge_emissions(emits):
 
 def stream_push_sharded(q, groups, keys, carries, combiners, *,
                         num_shards, mesh=None, n_valid=None,
-                        p_ports: int = 4):
+                        p_ports: int = 4, counters=None):
     """One sharded rolling push: per-shard partial tables, one combine
     tree, then the carry/emit bookkeeping of
     :func:`repro.core.streaming.stream_push_table`.  Bit-identical to the
     single-device :func:`repro.core.streaming.stream_push` for
-    exactly-mergeable ops."""
+    exactly-mergeable ops.  With ``counters`` returns
+    ``(ports, carries, counters)`` recording the per-round combine-tree
+    telemetry plus the pushed tuple count."""
     n = groups.shape[-1]
     groups = groups.astype(jnp.int32)
     first_group = groups[0]
@@ -504,8 +587,19 @@ def stream_push_sharded(q, groups, keys, carries, combiners, *,
         return _engine.multi_engine_partials(g, k, combiners)
 
     tables = _map_shards(local, mesh, (gs, ks))
-    table = combine_tree(tables, combiners, key_dtype=keys.dtype)
+    if counters is None:
+        table = combine_tree(tables, combiners, key_dtype=keys.dtype)
+    else:
+        from repro.obs import counters as _c
+        table, counters = combine_tree(tables, combiners,
+                                       key_dtype=keys.dtype,
+                                       counters=counters)
+        pushed = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+        counters = _c.bump(counters, "stream_tuples", pushed)
     table = _trim_table(table, n)   # pow2 padding -> back to N+1 out slots
-    return _streaming.stream_push_table(
+    out, new_carries = _streaming.stream_push_table(
         table, carries, combiners, first_group=first_group,
         any_real=any_real, p_ports=p_ports)
+    if counters is None:
+        return out, new_carries
+    return out, new_carries, counters

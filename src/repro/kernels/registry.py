@@ -179,11 +179,24 @@ def unsupported_error(name: str, reason: str) -> ValueError:
 
 def resolve_backend(explicit: str | None = None) -> str:
     """Apply the selection precedence; returns a backend name (may be
-    ``"auto"``, which :func:`choose_backend` then resolves per query)."""
-    name = explicit if explicit is not None else \
-        os.environ.get(BACKEND_ENV) or "auto"
-    if name != "auto":
-        get_backend(name)  # validate early
+    ``"auto"``, which :func:`choose_backend` then resolves per query).
+
+    Both sources are validated **eagerly**: an unknown explicit name and an
+    unknown ``REPRO_BACKEND`` env value each raise here, at plan time, with
+    the available-backends list — never a late dispatch failure deep in
+    execution (the env var is set far from the call site, so its error
+    names the variable)."""
+    if explicit is not None:
+        name = explicit
+        if name != "auto":
+            get_backend(name)  # validate early
+        return name
+    name = os.environ.get(BACKEND_ENV) or "auto"
+    if name != "auto" and name not in _BACKENDS:
+        raise ValueError(
+            f"{BACKEND_ENV}={name!r} names no registered backend "
+            f"[available backends: "
+            f"{', '.join(sorted(available_backends()))}]")
     return name
 
 

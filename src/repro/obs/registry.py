@@ -1,0 +1,108 @@
+"""Process-wide metrics registry: per-(backend, plan fingerprint) observed
+throughput.
+
+This is the telemetry table measured-cost routing will consult: when the
+adaptive planner's ``choose_backend`` replaces the static capability probe,
+it looks up ``(candidate backend, plan_fingerprint(plan))`` here and picks
+the backend the numbers favor.  The key is designed now so observations
+recorded by this PR survive into that one unchanged.
+
+``execute(..., collect_stats=True)`` records one observation per call when
+the results are concrete (never under a ``jax.jit`` trace — trace time is
+not throughput).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class _Cell:
+    tuples: float = 0.0
+    seconds: float = 0.0
+    calls: int = 0
+
+    @property
+    def tuples_per_s(self) -> float:
+        return self.tuples / self.seconds if self.seconds > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {"tuples": self.tuples, "seconds": self.seconds,
+                "calls": self.calls, "tuples_per_s": self.tuples_per_s}
+
+
+class MetricsRegistry:
+    """Accumulates observed tuples/s keyed by ``(backend, fingerprint)``."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._cells: Dict[Tuple[str, str], _Cell] = {}
+
+    def observe(self, backend: str, fingerprint: str, *, tuples: float,
+                seconds: float) -> None:
+        if seconds <= 0:
+            return
+        with self._lock:
+            cell = self._cells.setdefault((backend, fingerprint), _Cell())
+            cell.tuples += float(tuples)
+            cell.seconds += float(seconds)
+            cell.calls += 1
+
+    def tuples_per_s(self, backend: str, fingerprint: str) -> Optional[float]:
+        with self._lock:
+            cell = self._cells.get((backend, fingerprint))
+        return None if cell is None else cell.tuples_per_s
+
+    def best_backend(self, fingerprint: str) -> Optional[str]:
+        """The backend with the highest observed tuples/s for this plan
+        shape — the measured-cost routing primitive (None: no data yet)."""
+        with self._lock:
+            candidates = [(cell.tuples_per_s, backend)
+                          for (backend, fp), cell in self._cells.items()
+                          if fp == fingerprint and cell.seconds > 0]
+        if not candidates:
+            return None
+        return max(candidates)[1]
+
+    def snapshot(self) -> dict:
+        """{(backend, fingerprint): {tuples, seconds, calls, tuples_per_s}}"""
+        with self._lock:
+            return {key: cell.to_dict() for key, cell in self._cells.items()}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._cells.clear()
+
+
+#: the process-wide registry ``execute(..., collect_stats=True)`` feeds
+METRICS = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return METRICS
+
+
+def plan_fingerprint(plan) -> str:
+    """A stable string identifying the *shape* of a plan — ops, grouping,
+    window framing, path, shard count — everything cost depends on except
+    the backend (the backend is the other half of the registry key) and
+    the data itself."""
+    q = plan.query
+    w = q.window
+    bits = [f"ops={','.join(q.op_names)}",
+            f"group_by={int(q.group_by)}",
+            f"path={plan.path}",
+            f"shards={plan.num_shards}"]
+    if w is not None:
+        if w.is_time:
+            bits.append(f"window=time:r{w.range}:s{w.slide}"
+                        f":l{w.max_lateness}:rc{w.reorder_capacity}")
+        elif w.per_group:
+            bits.append(f"window=pergroup:wa{w.wa}:cap{w.capacity}")
+        else:
+            bits.append(f"window=count:ws{w.ws}:wa{w.wa}")
+    if q.interpolate:
+        bits.append("interpolate=1")
+    return ";".join(bits)

@@ -1,0 +1,144 @@
+"""Host-side nested span tracing for engine stages.
+
+Usage::
+
+    from repro.obs import trace
+
+    with trace.capture() as tr:
+        res = execute(q, groups)
+    print(tr.report())
+
+Inside the engine, stages are wrapped as::
+
+    with trace.span("merge") as sp:
+        table = combine_tree(...)
+        sp.attach(table)
+
+``span()`` is free when no capture is active: it returns a shared no-op
+context manager, so the engine pays one function call and nothing else.
+When a capture *is* active, ``attach()``-ed device values are passed to
+``jax.block_until_ready`` at span exit so the recorded wall time covers
+the actual device work, not just async dispatch.  Tracer values are
+skipped — spans inside a ``jax.jit`` trace record trace time only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from contextlib import contextmanager
+from typing import Any, Iterator, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    depth: int
+    start_s: float
+    duration_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "depth": self.depth,
+                "start_s": self.start_s, "duration_s": self.duration_s}
+
+
+class Tracer:
+    """Collects completed spans for one :func:`capture` block."""
+
+    def __init__(self) -> None:
+        self.spans: List[Span] = []
+        self._depth = 0
+
+    def report(self) -> str:
+        lines = []
+        for s in self.spans:
+            lines.append(f"{'  ' * s.depth}{s.name}: {s.duration_s * 1e3:.3f} ms")
+        return "\n".join(lines)
+
+    def to_dicts(self) -> list:
+        return [s.to_dict() for s in self.spans]
+
+    def durations(self) -> dict:
+        """name -> summed duration in seconds (over all spans of that name)."""
+        out: dict = {}
+        for s in self.spans:
+            out[s.name] = out.get(s.name, 0.0) + s.duration_s
+        return out
+
+
+_ACTIVE: List[Tracer] = []
+
+
+@contextmanager
+def capture() -> Iterator[Tracer]:
+    """Activate a tracer; spans entered inside the block are recorded."""
+    tracer = Tracer()
+    _ACTIVE.append(tracer)
+    try:
+        yield tracer
+    finally:
+        _ACTIVE.remove(tracer)
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def attach(self, value: Any) -> Any:
+        return value
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NULL = _NullSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("_tracer", "_span", "_payload")
+
+    def __init__(self, tracer: Tracer, name: str) -> None:
+        self._tracer = tracer
+        self._span = Span(name, tracer._depth, 0.0)
+        self._payload: Any = None
+
+    def attach(self, value: Any) -> Any:
+        """Register device values to sync on at exit; returns them unchanged."""
+        self._payload = value
+        return value
+
+    def __enter__(self) -> "_LiveSpan":
+        self._span.depth = self._tracer._depth
+        self._tracer._depth += 1
+        self._span.start_s = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if exc[0] is None and self._payload is not None:
+            _block_until_ready(self._payload)
+        self._span.duration_s = time.perf_counter() - self._span.start_s
+        self._tracer._depth -= 1
+        self._tracer.spans.append(self._span)
+        return False
+
+
+def span(name: str):
+    """A context manager timing one engine stage under the active tracer."""
+    if not _ACTIVE:
+        return _NULL
+    return _LiveSpan(_ACTIVE[-1], name)
+
+
+def _block_until_ready(value: Any) -> None:
+    leaves = [x for x in jax.tree_util.tree_leaves(value)
+              if not isinstance(x, jax.core.Tracer)]
+    if leaves:
+        jax.block_until_ready(leaves)
+
+
+def active() -> Optional[Tracer]:
+    """The innermost active tracer, or None."""
+    return _ACTIVE[-1] if _ACTIVE else None

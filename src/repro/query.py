@@ -46,6 +46,7 @@ queries sort internally, so all of these hold for free there.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Any, NamedTuple
 
 import jax
@@ -58,6 +59,7 @@ from repro.core.swag import (_median_sorted_window, _swag, _swag_median,
                              swag_multi, swag_per_group)
 from repro.core.combiners import Combiner, get_combiner
 from repro.kernels import registry as _registry
+from repro.obs import trace as _trace
 
 Array = jax.Array
 
@@ -340,6 +342,10 @@ class AggResult(NamedTuple):
     values: dict            # {op name: [N] aggregate column}
     valid: Array            # [N] bool — which slots hold a real group
     num_groups: Array       # scalar int32 (per window when windowed)
+    #: engine telemetry (``execute(..., collect_stats=True)``): a dict of
+    #: :mod:`repro.obs.counters` values — None when stats are off (the
+    #: default), so the result pytree is unchanged for existing callers
+    stats: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -538,7 +544,8 @@ def _prepare_inputs(query: Query, groups, keys, n_valid):
     return groups, keys, n_valid
 
 
-def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
+def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None,
+              collect_stats: bool = False):
     """Return the raw streaming step of a planned streaming query:
     ``(groups, keys, state, n_valid) -> ((groups, values, valid, num, rr),
     state)`` — jit-friendly (close over the static plan).
@@ -548,10 +555,18 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
     (push the batch, then emit one per-group evaluation).  Sharded plans
     (``num_shards > 1``) accept the same whole batch, run per-shard partial
     tables through the combine tree (over ``mesh`` when given), and fold
-    the carry at emit time — bit-identical slots."""
+    the carry at emit time — bit-identical slots.
+
+    ``collect_stats=True`` expects (and returns) the wrapped state
+    ``(engine state, counters dict)`` of
+    ``init_stream_state(..., collect_stats=True)`` — the counters
+    accumulate across pushes (:mod:`repro.obs.counters`); the default
+    traces exactly the pre-observability jaxpr."""
     if p.path != "stream":
         raise ValueError("stream_fn needs a streaming plan")
     q = p.query
+    if collect_stats:
+        from repro.obs import counters as _c
 
     if q.window is not None and q.window.is_time:
         from repro.core import eventtime as _eventtime
@@ -568,10 +583,17 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
                 if timestamps is None:
                     raise ValueError("event-time streaming pushes need "
                                      "timestamps=")
-                return _qx.stream_push_eventtime_sharded(
-                    q, groups, keys, timestamps, state,
+                if not collect_stats:
+                    return _qx.stream_push_eventtime_sharded(
+                        q, groups, keys, timestamps, state,
+                        num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
+                        p_ports=p_ports)
+                inner, counters = state
+                ports, inner, counters = _qx.stream_push_eventtime_sharded(
+                    q, groups, keys, timestamps, inner,
                     num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
-                    p_ports=p_ports)
+                    p_ports=p_ports, counters=counters)
+                return ports, (inner, counters)
 
             return sharded_time_step
 
@@ -579,18 +601,37 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
             if timestamps is None:
                 raise ValueError("event-time streaming pushes need "
                                  "timestamps=")
-            rstate, pstate = state
-            emit, rstate = _eventtime.reorder_push(
-                rspec, rstate, timestamps, groups, keys, n_valid=n_valid)
+            counters = None
+            if collect_stats:
+                (rstate, pstate), counters = state
+            else:
+                rstate, pstate = state
+            if counters is None:
+                emit, rstate = _eventtime.reorder_push(
+                    rspec, rstate, timestamps, groups, keys, n_valid=n_valid)
+            else:
+                emit, rstate, counters = _eventtime.reorder_push(
+                    rspec, rstate, timestamps, groups, keys, n_valid=n_valid,
+                    counters=counters)
             wm = rstate.max_ts - lateness
-            pstate = _panestore.push_time(
-                spec, pstate, emit.groups, emit.keys, emit.ts,
-                live=emit.live, retire_below=wm - time_range)
+            if counters is None:
+                pstate = _panestore.push_time(
+                    spec, pstate, emit.groups, emit.keys, emit.ts,
+                    live=emit.live, retire_below=wm - time_range)
+            else:
+                pstate, counters = _panestore.push_time(
+                    spec, pstate, emit.groups, emit.keys, emit.ts,
+                    live=emit.live, retire_below=wm - time_range,
+                    counters=counters)
+                counters = _c.put(counters, "late_dropped", rstate.dropped)
+                counters = _c.put(counters, "watermark", wm)
             g, values, valid, num = _panestore.replay(
                 spec, pstate, q.ops, interpolate=q.interpolate,
                 eval_time=wm)
             rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
-            return (g, values, valid, num, rr), (rstate, pstate)
+            if counters is None:
+                return (g, values, valid, num, rr), (rstate, pstate)
+            return (g, values, valid, num, rr), ((rstate, pstate), counters)
 
         return time_step
 
@@ -599,10 +640,17 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
         combiners = _combiners(q)
 
         def sharded_step(groups, keys, carries, n_valid=None):
-            return _qx.stream_push_sharded(
-                q, groups, keys, carries, combiners,
+            if not collect_stats:
+                return _qx.stream_push_sharded(
+                    q, groups, keys, carries, combiners,
+                    num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
+                    p_ports=p_ports)
+            inner, counters = carries
+            ports, inner, counters = _qx.stream_push_sharded(
+                q, groups, keys, inner, combiners,
                 num_shards=p.num_shards, mesh=mesh, n_valid=n_valid,
-                p_ports=p_ports)
+                p_ports=p_ports, counters=counters)
+            return ports, (inner, counters)
 
         return sharded_step
 
@@ -610,29 +658,86 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None):
         spec = q.window.store_spec()
 
         def store_step(groups, keys, state, n_valid=None):
-            state = _panestore.push(spec, state, groups, keys,
-                                    n_valid=n_valid)
+            counters = None
+            if collect_stats:
+                state, counters = state
+            if counters is None:
+                state = _panestore.push(spec, state, groups, keys,
+                                        n_valid=n_valid)
+            else:
+                state, counters = _panestore.push(spec, state, groups, keys,
+                                                  n_valid=n_valid,
+                                                  counters=counters)
             g, values, valid, num = _panestore.replay(
                 spec, state, q.ops, interpolate=q.interpolate)
             rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
-            return (g, values, valid, num, rr), state
+            if counters is None:
+                return (g, values, valid, num, rr), state
+            return (g, values, valid, num, rr), (state, counters)
 
         return store_step
 
     combiners = _combiners(q)
 
     def step(groups, keys, carries, n_valid=None):
-        return _streaming.stream_push(groups, keys, carries, combiners,
-                                      n_valid=n_valid, p_ports=p_ports)
+        if not collect_stats:
+            return _streaming.stream_push(groups, keys, carries, combiners,
+                                          n_valid=n_valid, p_ports=p_ports)
+        inner, counters = carries
+        out, inner = _streaming.stream_push(groups, keys, inner, combiners,
+                                            n_valid=n_valid, p_ports=p_ports)
+        n = groups.shape[-1]
+        pushed = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+        counters = _c.bump(counters, "stream_tuples", pushed)
+        counters = _c.bump(counters, "stream_emitted", out[3])
+        return out, (inner, counters)
 
     return step
 
 
-def init_stream_state(p: Plan, key_dtype=jnp.int32):
+def _init_stream_counters(p: Plan) -> dict:
+    """The zeroed counters dict a stats-collecting stream carry starts
+    from — keyed up front (every key the step will touch) so the carry
+    pytree structure is stable from the first push on (one jit trace)."""
+    from repro.core.eventtime import TS_MIN
+    from repro.obs import counters as _c
+    w = p.query.window
+    if w is not None and w.is_time:
+        c = _c.init(reorder_depth_hwm=jnp.zeros((), jnp.int32),
+                    reorder_forced_pops=jnp.zeros((), jnp.int32),
+                    pane_evictions=jnp.zeros((), jnp.int32),
+                    pane_occupancy_hwm=jnp.zeros((), jnp.int32),
+                    late_dropped=jnp.zeros((), jnp.int32),
+                    watermark=jnp.asarray(TS_MIN, jnp.int32))
+        if p.num_shards > 1:
+            c["watermark_lag"] = jnp.zeros((), jnp.int32)
+        return c
+    if p.num_shards > 1:
+        # the combine-tree telemetry is static per plan; seed with the
+        # correct round count so the carry structure never changes
+        rounds = (p.num_shards - 1).bit_length()  # log2 of next pow2
+        return _c.init(stream_tuples=jnp.zeros((), jnp.int32),
+                       combine_rounds=jnp.asarray(rounds, jnp.int32),
+                       combine_round_width=jnp.zeros((rounds,), jnp.int32),
+                       combine_round_groups=jnp.zeros((rounds,), jnp.int32),
+                       combine_round_bytes=jnp.zeros((rounds,), jnp.float32))
+    if w is not None:
+        return _c.init(pane_evictions=jnp.zeros((), jnp.int32),
+                       pane_occupancy_hwm=jnp.zeros((), jnp.int32))
+    return _c.init(stream_tuples=jnp.zeros((), jnp.int32),
+                   stream_emitted=jnp.zeros((), jnp.int32))
+
+
+def init_stream_state(p: Plan, key_dtype=jnp.int32,
+                      collect_stats: bool = False):
     """Fresh state for a streaming plan: per-op carries, a pane store when
     the query is windowed, or ``(reorder buffer(s), time-pane store)`` for
     event-time windows (sharded event-time plans stack one reorder buffer
-    per shard — each shard tracks its own watermark)."""
+    per shard — each shard tracks its own watermark).
+
+    ``collect_stats=True`` wraps the state as ``(state, counters)`` — the
+    shape ``stream_fn(..., collect_stats=True)`` threads; pass the same
+    flag to both (``execute`` does)."""
     from repro.core import segscan
     if p.query.window is not None and p.query.window.is_time:
         from repro.core import eventtime as _eventtime
@@ -642,13 +747,17 @@ def init_stream_state(p: Plan, key_dtype=jnp.int32):
             rstate = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (p.num_shards,) + x.shape),
                 rstate)
-        return (rstate,
-                _panestore.init_store(p.query.window.store_spec(),
-                                      key_dtype))
-    if p.query.window is not None:
-        return _panestore.init_store(p.query.window.store_spec(), key_dtype)
-    return tuple(segscan.init_carry(c, key_dtype)
-                 for c in _combiners(p.query))
+        state = (rstate,
+                 _panestore.init_store(p.query.window.store_spec(),
+                                       key_dtype))
+    elif p.query.window is not None:
+        state = _panestore.init_store(p.query.window.store_spec(), key_dtype)
+    else:
+        state = tuple(segscan.init_carry(c, key_dtype)
+                      for c in _combiners(p.query))
+    if collect_stats:
+        return (state, _init_stream_counters(p))
+    return state
 
 
 def _execute_engine(p: Plan, groups, keys, n_valid, *, tile, interpret):
@@ -815,28 +924,35 @@ def _execute_time_window(p: Plan, groups, keys, timestamps, *,
 
 
 def _execute_sharded(p: Plan, groups, keys, n_valid, *, mesh, use_xla_sort,
-                     interpret, tile):
+                     interpret, tile, counters=None):
     from repro.distributed import query_exec as _qx
     q = p.query
     if p.path == "window":
         if n_valid is not None:
             raise ValueError("n_valid applies to non-windowed queries")
+        # the per-window combine trees run vmapped (one tiny tree per
+        # window) — no shard-tree telemetry to record there
         g, values, valid, num = _qx._window_sharded(
             q, groups, keys, num_shards=p.num_shards, mesh=mesh,
             backend=p.backend, use_xla_sort=use_xla_sort,
             interpret=interpret)
+    elif counters is not None:
+        g, values, valid, num, counters = _qx._engine_sharded(
+            q, groups, keys, n_valid, num_shards=p.num_shards, mesh=mesh,
+            backend=p.backend, tile=tile, interpret=interpret,
+            counters=counters)
     else:
         g, values, valid, num = _qx._engine_sharded(
             q, groups, keys, n_valid, num_shards=p.num_shards, mesh=mesh,
             backend=p.backend, tile=tile, interpret=interpret)
-    return AggResult(g, values, valid, num)
+    return AggResult(g, values, valid, num, counters)
 
 
 def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
             n_valid=None, timestamps=None, mesh=None,
             num_shards: int | None = None,
             use_xla_sort: bool = False, interpret: bool | None = None,
-            tile: int = 1024):
+            tile: int = 1024, collect_stats: bool = False):
     """Run a :class:`Query` (planned on the fly) or a prebuilt :class:`Plan`.
 
     Args:
@@ -868,11 +984,20 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
       interpret: kernel backends — force/suppress Pallas interpret mode
         (``None``: the capability probe picks interpret on CPU).
       tile: pallas group-by backend — kernel tile length.
+      collect_stats: thread jit-safe engine counters
+        (:mod:`repro.obs.counters`) through execution and surface them as
+        ``AggResult.stats``; each concrete (non-traced) call also records
+        observed tuples/s in :data:`repro.obs.registry.METRICS` under
+        ``(backend, plan fingerprint)``.  The default (``False``) traces
+        the identical jaxpr as before the counters existed.  Streaming
+        queries must keep the flag constant across a stream (the counters
+        live in the carry): pass ``state=None`` to toggle it.
 
     Returns:
       ``(AggResult, new_state)``; ``new_state`` is ``None`` unless the query
       streams.
     """
+    t0 = _time.perf_counter()
     devices = None
     if mesh is not None:
         from repro.distributed import query_exec as _qx
@@ -884,19 +1009,22 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
         num_shards = mesh_shards
         devices = list(mesh.devices.flat)
 
-    if isinstance(plan_or_query, Plan):
-        p = plan_or_query
-        want_backend = backend if backend is not None else p.backend
-        want_shards = num_shards if num_shards is not None else p.num_shards
-        if want_backend != p.backend or want_shards != p.num_shards:
-            p = plan(p.query, backend=want_backend, num_shards=want_shards,
+    with _trace.span("plan"):
+        if isinstance(plan_or_query, Plan):
+            p = plan_or_query
+            want_backend = backend if backend is not None else p.backend
+            want_shards = (num_shards if num_shards is not None
+                           else p.num_shards)
+            if want_backend != p.backend or want_shards != p.num_shards:
+                p = plan(p.query, backend=want_backend,
+                         num_shards=want_shards, devices=devices)
+        else:
+            p = plan(plan_or_query, backend=backend,
+                     num_shards=num_shards if num_shards is not None else 1,
                      devices=devices)
-    else:
-        p = plan(plan_or_query, backend=backend,
-                 num_shards=num_shards if num_shards is not None else 1,
-                 devices=devices)
 
     groups, keys, n_valid = _prepare_inputs(p.query, groups, keys, n_valid)
+    n = groups.shape[-1]
 
     is_time = p.query.window is not None and p.query.window.is_time
     if is_time and timestamps is None:
@@ -908,32 +1036,83 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
 
     if p.path == "stream":
         if state is None:
-            state = init_stream_state(p, keys.dtype)
-        step = stream_fn(p, mesh=mesh)
-        if is_time:
-            (g, values, valid, num, _rr), new_state = step(
-                groups, keys, state, n_valid, timestamps)
-        else:
-            (g, values, valid, num, _rr), new_state = step(
-                groups, keys, state, n_valid)
-        return AggResult(g, values, valid, num), new_state
+            state = init_stream_state(p, keys.dtype,
+                                      collect_stats=collect_stats)
+        elif collect_stats != _state_collects_stats(state):
+            raise ValueError(
+                "collect_stats must stay constant across a stream — the "
+                "counters live in the threaded carry; pass state=None to "
+                "start a new stream with the other setting")
+        step = stream_fn(p, mesh=mesh, collect_stats=collect_stats)
+        with _trace.span(f"dispatch:{p.backend}/stream") as sp:
+            if is_time:
+                (g, values, valid, num, _rr), new_state = step(
+                    groups, keys, state, n_valid, timestamps)
+            else:
+                (g, values, valid, num, _rr), new_state = step(
+                    groups, keys, state, n_valid)
+            sp.attach((values, new_state))
+        stats = dict(new_state[1]) if collect_stats else None
+        res = AggResult(g, values, valid, num, stats)
+        if collect_stats:
+            _observe_throughput(p, res, n, t0)
+        return res, new_state
+
+    counters = None
+    if collect_stats:
+        counters = {}
 
     if p.num_shards > 1:
-        return _execute_sharded(p, groups, keys, n_valid, mesh=mesh,
-                                use_xla_sort=use_xla_sort,
-                                interpret=interpret, tile=tile), None
-
-    if p.path == "window":
+        with _trace.span(f"dispatch:{p.backend}/{p.path}/sharded") as sp:
+            res = _execute_sharded(p, groups, keys, n_valid, mesh=mesh,
+                                   use_xla_sort=use_xla_sort,
+                                   interpret=interpret, tile=tile,
+                                   counters=counters)
+            sp.attach(res)
+    elif p.path == "window":
         if n_valid is not None:
             raise ValueError("n_valid applies to non-windowed queries")
-        if is_time:
-            res = _execute_time_window(p, groups, keys, timestamps,
-                                       interpret=interpret)
-        else:
-            res = _execute_window(p, groups, keys,
-                                  use_xla_sort=use_xla_sort,
-                                  interpret=interpret)
+        with _trace.span(f"dispatch:{p.backend}/window") as sp:
+            if is_time:
+                res = _execute_time_window(p, groups, keys, timestamps,
+                                           interpret=interpret)
+            else:
+                res = _execute_window(p, groups, keys,
+                                      use_xla_sort=use_xla_sort,
+                                      interpret=interpret)
+            sp.attach(res)
     else:
-        res = _execute_engine(p, groups, keys, n_valid, tile=tile,
-                              interpret=interpret)
+        with _trace.span(f"dispatch:{p.backend}/engine") as sp:
+            res = _execute_engine(p, groups, keys, n_valid, tile=tile,
+                                  interpret=interpret)
+            sp.attach(res)
+
+    if collect_stats:
+        stats = dict(res.stats) if res.stats else {}
+        stats["tuples"] = n
+        stats["num_shards"] = p.num_shards
+        res = res._replace(stats=stats)
+        _observe_throughput(p, res, n, t0)
     return res, None
+
+
+def _state_collects_stats(state) -> bool:
+    """Whether a streaming state is the ``(state, counters)`` wrapping of
+    ``collect_stats=True`` (a dict second element — no engine state ever
+    threads one)."""
+    return (isinstance(state, tuple) and len(state) == 2
+            and isinstance(state[1], dict))
+
+
+def _observe_throughput(p: Plan, res: AggResult, tuples: int,
+                        t0: float) -> None:
+    """Record one observed-throughput sample in the process registry —
+    only for concrete results (under a jit trace the clock would measure
+    trace time, and the sample would poison the routing table)."""
+    from repro.obs.registry import METRICS, plan_fingerprint
+    leaves = jax.tree_util.tree_leaves((res.groups, res.values))
+    if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        return
+    jax.block_until_ready(leaves)
+    METRICS.observe(p.backend, plan_fingerprint(p), tuples=int(tuples),
+                    seconds=_time.perf_counter() - t0)

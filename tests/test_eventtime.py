@@ -409,6 +409,29 @@ def test_streaming_aggregator_flush(rng, num_shards):
     assert got == want
 
 
+@pytest.mark.parametrize("num_shards", [None, 2])
+def test_stream_stats_zero_drops_for_in_contract_shuffles(rng, num_shards):
+    """The late-drop counter rides StreamResult.stats: any in-contract
+    shuffle (within ``max_lateness``) must report exactly zero dropped
+    tuples at every push — and a beyond-contract straggler must show up
+    in the counter instead of vanishing silently."""
+    N, B, L = 96, 32, 24
+    g, k, t = _sorted_time_stream(rng, N)
+    pert = _perturb(rng, t, L)
+    g, k, t = g[pert], k[pert], t[pert]
+    agg = StreamingAggregator(
+        "min", window=Window(range=48, slide=16, max_lateness=L,
+                             reorder_capacity=64), num_shards=num_shards)
+    for i in range(0, N, B):
+        res = agg.push(g[i:i + B], k[i:i + B], timestamps=t[i:i + B])
+        assert res.stats is not None
+        assert int(res.stats["late_dropped"]) == 0
+    # one straggler far behind the watermark: flagged and dropped, counted
+    stale = np.zeros(B, np.int32)
+    res = agg.push(stale, stale, timestamps=stale.astype(np.int64))
+    assert int(res.stats["late_dropped"]) >= 1
+
+
 def test_streaming_push_requires_timestamps():
     _, _, step, state = _stream_setup()
     z = jnp.zeros(8, jnp.int32)

@@ -1,0 +1,330 @@
+"""Observability layer: jit-safe counters, stage tracing, metrics registry.
+
+The load-bearing guarantees:
+
+  * ``collect_stats=True`` never changes a result — bit-identical
+    ``AggResult``/``StreamResult`` values against the stats-off run, on
+    the reference backend and on the Pallas kernels (property-tested);
+  * ``collect_stats=False`` is free — the traced jaxpr carries no counter
+    arithmetic (strictly fewer equations than the stats-on trace, stable
+    across traces) and the stream carry keeps its pre-observability
+    pytree structure;
+  * the host-side substrate (spans, registry, exporters) round-trips.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import counters as obs_counters
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.registry import MetricsRegistry, plan_fingerprint
+from repro.query import (Query, Window, execute, init_stream_state, plan,
+                         stream_fn)
+from repro.core.streaming import StreamingAggregator
+
+BACKENDS = ("reference", "pallas")
+
+
+def _data(seed, n=256, n_groups=8, sort_groups=True):
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, n_groups, n).astype(np.int32)
+    if sort_groups:
+        g = np.sort(g)
+    k = rng.integers(-100, 100, n).astype(np.int32)
+    return jnp.array(g), jnp.array(k)
+
+
+def _assert_same_result(a, b):
+    assert np.array_equal(np.asarray(a.groups), np.asarray(b.groups))
+    assert np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    for name in a.values:
+        assert np.array_equal(np.asarray(a.values[name]),
+                              np.asarray(b.values[name])), name
+
+
+# ---------------------------------------------------------------------------
+# S3: collect_stats on/off bit-identity (property, both backends)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), backend=st.sampled_from(BACKENDS))
+def test_grouped_stats_bit_identical(backend, seed):
+    g, k = _data(seed)
+    q = Query(ops=("sum", "min", "count"))
+    off, _ = execute(plan(q, backend=backend), g, k)
+    on, _ = execute(plan(q, backend=backend), g, k, collect_stats=True)
+    _assert_same_result(off, on)
+    assert off.stats is None
+    assert int(on.stats["tuples"]) == g.shape[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), backend=st.sampled_from(BACKENDS))
+def test_windowed_stats_bit_identical(backend, seed):
+    g, k = _data(seed, sort_groups=False)
+    q = Query(ops=("sum", "min"), window=Window(ws=32, wa=8))
+    off, _ = execute(plan(q, backend=backend), g, k)
+    on, _ = execute(plan(q, backend=backend), g, k, collect_stats=True)
+    _assert_same_result(off, on)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_streaming_stats_bit_identical(seed):
+    """Reference backend (streaming carries are reference-only): plain,
+    pane-store windowed and event-time streams all push bit-identically
+    with the counters carry attached."""
+    rng = np.random.default_rng(seed)
+    queries = [
+        Query(ops=("sum",), streaming=True),
+        Query(ops=("sum",), window=Window(ws=16, wa=8, capacity=8),
+              streaming=True),
+        Query(ops=("min",), window=Window(range=32, slide=8, max_lateness=4,
+                                          reorder_capacity=32),
+              streaming=True),
+    ]
+    for q in queries:
+        is_time = q.window is not None and q.window.is_time
+        plain = q.window is None
+        st_off = st_on = None
+        t0 = 0
+        for _ in range(3):
+            g = rng.integers(0, 6, 64).astype(np.int32)
+            if plain:
+                g = np.sort(g)
+            k = rng.integers(-50, 50, 64).astype(np.int32)
+            kw = {}
+            if is_time:
+                kw["timestamps"] = np.arange(t0, t0 + 64)
+                t0 += 64
+            off, st_off = execute(q, g, k, state=st_off, **kw)
+            on, st_on = execute(q, g, k, state=st_on, collect_stats=True,
+                                **kw)
+            _assert_same_result(off, on)
+            assert isinstance(on.stats, dict) and on.stats
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when off
+
+
+def _num_eqns(jaxpr) -> int:
+    total = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for p in eqn.params.values():
+            if hasattr(p, "jaxpr"):
+                total += _num_eqns(p.jaxpr)
+    return total
+
+
+@pytest.mark.parametrize("q", [
+    Query(ops=("sum",), streaming=True),
+    Query(ops=("sum",), window=Window(ws=16, wa=8, capacity=8),
+          streaming=True),
+], ids=["plain", "panestore"])
+def test_stats_off_traces_no_counter_ops(q):
+    """The stats-off stream step must not pay for the counters: its carry
+    keeps the bare engine-state structure (no dict wrapper) and its jaxpr
+    is strictly smaller than the stats-on one — and identical across
+    traces, so a stats-on trace never pollutes the off path."""
+    p = plan(q)
+    g = jnp.zeros(64, jnp.int32)
+    k = jnp.zeros(64, jnp.int32)
+
+    st_off = init_stream_state(p)
+    st_on = init_stream_state(p, collect_stats=True)
+    assert isinstance(st_on, tuple) and len(st_on) == 2 \
+        and isinstance(st_on[1], dict)
+    assert not (isinstance(st_off, tuple) and len(st_off) == 2
+                and isinstance(st_off[1], dict))
+
+    step_off = stream_fn(p)
+    step_on = stream_fn(p, collect_stats=True)
+    jx_off = jax.make_jaxpr(lambda s: step_off(g, k, s))(st_off)
+    jx_on = jax.make_jaxpr(lambda s: step_on(g, k, s))(st_on)
+    assert _num_eqns(jx_off.jaxpr) < _num_eqns(jx_on.jaxpr)
+    jx_off2 = jax.make_jaxpr(lambda s: step_off(g, k, s))(st_off)
+    assert str(jx_off) == str(jx_off2)
+
+
+def test_stats_constancy_enforced_across_stream():
+    """A stream started with collect_stats=True must keep it: flipping the
+    flag mid-stream would silently change the carry structure, so execute
+    rejects the mismatch eagerly."""
+    q = Query(ops=("sum",), streaming=True)
+    g = jnp.zeros(8, jnp.int32)
+    _, state = execute(q, g, g, collect_stats=True)
+    with pytest.raises(ValueError, match="collect_stats"):
+        execute(q, g, g, state=state)
+    _, state = execute(q, g, g)
+    with pytest.raises(ValueError, match="collect_stats"):
+        execute(q, g, g, state=state, collect_stats=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded telemetry: per-round combine-tree widths
+
+
+def test_sharded_stats_report_combine_rounds():
+    g, k = _data(11)
+    q = Query(ops=("sum", "min"))
+    res, _ = execute(plan(q, backend="reference", num_shards=4), g, k,
+                     collect_stats=True)
+    s = res.stats
+    assert int(s["num_shards"]) == 4
+    widths = np.asarray(s["combine_round_width"])
+    assert widths.shape == (2,)          # log2(4) tree rounds
+    assert widths[1] == 2 * widths[0]    # pairwise merge doubles the table
+    assert np.asarray(s["combine_round_groups"]).shape == (2,)
+    assert np.asarray(s["combine_round_bytes"]).shape == (2,)
+    off, _ = execute(plan(q, backend="reference", num_shards=4), g, k)
+    _assert_same_result(off, res)
+
+
+def test_streaming_aggregator_surfaces_stats():
+    rng = np.random.default_rng(5)
+    g = np.sort(rng.integers(0, 6, 64)).astype(np.int32)
+    k = rng.integers(0, 50, 64).astype(np.int32)
+    agg = StreamingAggregator("sum", collect_stats=True)
+    res = agg.push(g, k)
+    assert int(res.stats["stream_tuples"]) == 64
+    fin = agg.flush()
+    assert int(fin.stats["stream_tuples"]) == 64
+    # flush resets the counters with the stream
+    res2 = agg.push(g, k)
+    assert int(res2.stats["stream_tuples"]) == 64
+
+
+# ---------------------------------------------------------------------------
+# counters helpers (None-transparent by contract)
+
+
+def test_counters_helpers_none_transparent():
+    assert obs_counters.bump(None, "x", 1) is None
+    assert obs_counters.high_water(None, "x", 1) is None
+    assert obs_counters.put(None, "x", 1) is None
+    assert obs_counters.ensure(None, ("x",)) is None
+    c = obs_counters.init()
+    c = obs_counters.ensure(c, ("a", "b"))
+    assert set(c) == {"a", "b"}
+    c2 = obs_counters.bump(c, "a", jnp.int32(3))
+    assert int(c2["a"]) == 3 and int(c["a"]) == 0   # functional update
+    c3 = obs_counters.high_water(c2, "b", jnp.int32(7))
+    c3 = obs_counters.high_water(c3, "b", jnp.int32(4))
+    assert int(c3["b"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# host-side substrate: spans, registry, fingerprint, exporters
+
+
+def test_trace_capture_nests_dispatch_spans():
+    g, k = _data(3)
+    with obs_trace.capture() as tr:
+        execute(Query(ops=("sum",)), g, k)
+    names = [s.name for s in tr.spans]
+    assert "plan" in names
+    assert any(n.startswith("dispatch:") for n in names)
+    by_name = {s.name: s for s in tr.spans}
+    dispatch = next(s for s in tr.spans if s.name.startswith("dispatch:"))
+    assert by_name["plan"].depth == dispatch.depth
+    assert all(s.duration_s >= 0 for s in tr.spans)
+    # no capture active -> span() is the shared no-op
+    assert obs_trace.span("x") is obs_trace.span("y")
+
+
+def test_metrics_registry_accumulates_and_routes():
+    reg = MetricsRegistry()
+    reg.observe("reference", "fp", tuples=1000, seconds=1.0)
+    reg.observe("reference", "fp", tuples=1000, seconds=1.0)
+    reg.observe("pallas", "fp", tuples=4000, seconds=1.0)
+    assert reg.tuples_per_s("reference", "fp") == 1000.0
+    cell = reg.snapshot()[("reference", "fp")]
+    assert cell["calls"] == 2 and cell["tuples"] == 2000.0
+    assert reg.best_backend("fp") == "pallas"
+    assert reg.best_backend("other") is None
+    reg.observe("x", "fp", tuples=1, seconds=0.0)   # ignored, not a div0
+    reg.reset()
+    assert reg.snapshot() == {}
+
+
+def test_execute_feeds_process_registry():
+    from repro.obs.registry import METRICS
+    g, k = _data(9)
+    p = plan(Query(ops=("sum",)), backend="reference")
+    fp = plan_fingerprint(p)
+    before = METRICS.snapshot().get(("reference", fp), {"calls": 0})["calls"] \
+        if ("reference", fp) in METRICS.snapshot() else 0
+    execute(p, g, k, collect_stats=True)
+    cell = METRICS.snapshot()[("reference", fp)]
+    assert cell["calls"] == before + 1
+    assert cell["tuples_per_s"] > 0
+
+
+def test_plan_fingerprint_shapes():
+    p = plan(Query(ops=("sum", "min")), backend="reference")
+    assert plan_fingerprint(p) == "ops=sum,min;group_by=1;path=engine;shards=1"
+    pw = plan(Query(ops=("sum",), window=Window(ws=64, wa=16)),
+              backend="reference", num_shards=2)
+    assert "window=count:ws64:wa16" in plan_fingerprint(pw)
+    assert "shards=2" in plan_fingerprint(pw)
+    pt = plan(Query(ops=("min",), streaming=True,
+                    window=Window(range=32, slide=8, max_lateness=4,
+                                  reorder_capacity=16)))
+    fp = plan_fingerprint(pt)
+    assert "window=time:r32:s8:l4:rc16" in fp and "path=stream" in fp
+    # backend is the other half of the registry key, never in the fingerprint
+    assert "reference" not in fp
+
+
+def test_jsonl_export_roundtrip(tmp_path):
+    g, k = _data(7)
+    res, _ = execute(Query(ops=("sum",)), g, k, num_shards=2,
+                     collect_stats=True)
+    path = tmp_path / "stats.jsonl"
+    obs_export.write_jsonl([{"name": "t", "engine_stats": res.stats}], path)
+    [rec] = obs_export.read_jsonl(path)
+    assert rec["name"] == "t"
+    assert rec["engine_stats"]["tuples"] == g.shape[0]
+    assert isinstance(rec["engine_stats"]["combine_round_width"], list)
+    json.loads(path.read_text())  # single record: line is plain JSON
+
+
+def test_prometheus_export_format():
+    reg = MetricsRegistry()
+    reg.observe("reference", 'fp"x', tuples=100, seconds=1.0)
+    txt = obs_export.prometheus_metrics(
+        registry=reg, stats={"pane_evictions": jnp.int32(5),
+                             "combine_round_width": jnp.array([4, 8])})
+    assert '# TYPE repro_observed_tuples_per_s gauge' in txt
+    assert 'plan="fp\\"x"' in txt                    # label escaping
+    assert 'repro_engine_stat{name="pane_evictions"} 5.0' in txt
+    assert 'name="combine_round_width",round="1"} 8.0' in txt
+
+
+# ---------------------------------------------------------------------------
+# S1: eager REPRO_BACKEND validation
+
+
+def test_env_backend_validated_eagerly(monkeypatch):
+    from repro.kernels.registry import resolve_backend
+    monkeypatch.setenv("REPRO_BACKEND", "no-such-engine")
+    with pytest.raises(ValueError, match=r"REPRO_BACKEND='no-such-engine'"
+                                         r".*available backends"):
+        resolve_backend()
+    with pytest.raises(ValueError):
+        plan(Query(ops=("sum",)))
+    monkeypatch.setenv("REPRO_BACKEND", "reference")
+    assert resolve_backend() == "reference"
+    monkeypatch.delenv("REPRO_BACKEND")
+    assert resolve_backend() == "auto"
+    with pytest.raises(ValueError, match="unknown backend 'bogus'"):
+        resolve_backend("bogus")
