@@ -32,7 +32,10 @@ process-global MetricsRegistry snapshot — the observability sidecar the
 measured-cost router will consume.
 
 ``--only PREFIX`` runs the matching module(s) alone and merges their rows
-into the tracked json in place.
+into the tracked json in place.  PREFIX first matches module names; when no
+module matches, it falls back to *row-name* prefixes declared by modules via
+``ROW_PREFIXES`` (e.g. ``--only swag_per_group`` runs just the per-group
+rows of ``swag_bench``), and only the matching rows are re-measured/merged.
 """
 from __future__ import annotations
 
@@ -114,17 +117,27 @@ def main() -> None:
     ap.add_argument("module", nargs="?", default=None)
     args = ap.parse_args()
     only = args.only if args.only is not None else args.module
+    row_only = None
     if only:
         modules += quarantined
-        modules = [(n, m) for n, m in modules if n.startswith(only)]
-        if not modules:
-            ap.error(f"no benchmark module matches prefix {only!r}")
+        by_name = [(n, m) for n, m in modules if n.startswith(only)]
+        if by_name:
+            modules = by_name
+        else:
+            # fall back to row-name prefixes: run just the module(s) that
+            # emit matching rows, and just those rows
+            modules = [(n, m) for n, m in modules
+                       if any(rp.startswith(only)
+                              for rp in getattr(m, "ROW_PREFIXES", ()))]
+            if not modules:
+                ap.error(f"no benchmark module matches prefix {only!r}")
+            row_only = only
 
     print("name,us_per_call,derived")
     json_rows: list[dict] = []
     ran = []
     for name, mod in modules:
-        rows = mod.run()
+        rows = mod.run(only=row_only) if row_only else mod.run()
         for row in rows:
             print(f"{row['name']},{row['us_per_call']},{row['derived']}",
                   flush=True)

@@ -13,8 +13,11 @@ reference backend (``use_xla_sort=True`` keeps the sorter substrate equal).
 
 The ``swag_per_group/*`` rows sweep the pane-store subsystem (the paper's
 per-group-window approximation): num_groups x WS_g on
-``Window(ws_per_group=...)``, reporting stream-ingest throughput (the push
-scan + one replay per WA chunk).
+``Window(ws_per_group=...)``, reporting stream-ingest throughput.  Since
+the batched-evaluation rework (directory scan + arrival-rank partial fast
+path + one batched replay for merge ops) these rows run 74-388x over the
+original one-replay-per-WA-chunk numbers — CI's bench-smoke job asserts
+they stay >= 10x over the pre-batching seeds.
 
 Rows carry a numeric ``tuples_per_s`` so ``run.py`` can emit the
 machine-readable ``BENCH_swag.json`` tracked across PRs.
@@ -29,13 +32,20 @@ from benchmarks.common import time_fn
 from repro.core.swag import num_windows
 from repro.query import Query, Window, execute, plan
 
+#: row-name families this module emits — run.py's ``--only`` falls back to
+#: these when PREFIX matches no module name (e.g. ``--only swag_per_group``)
+ROW_PREFIXES = ("swag/", "swag_per_group/")
 
-def run() -> list[dict]:
+
+def run(only: str | None = None) -> list[dict]:
     rng = np.random.default_rng(2)
     n = 32768
     g = jnp.array(rng.integers(0, 32, n).astype(np.int32))
     k = jnp.array(rng.integers(0, 1000, n).astype(np.int32))
     rows = []
+
+    def want(name: str) -> bool:
+        return only is None or name.startswith(only)
 
     def add(name, fn, ws, wa):
         us = time_fn(fn, g, k, iters=5, warmup=2)
@@ -57,11 +67,13 @@ def run() -> list[dict]:
     for ws in (256, 1024, 4096):
         for wa in (ws, ws // 2, ws // 4, ws // 8):
             for op in ("sum", "median"):
-                add(f"swag/{op}_ws{ws}_wa{wa}_resort", arm(op, ws, wa, False),
-                    ws, wa)
+                name = f"swag/{op}_ws{ws}_wa{wa}_resort"
+                if want(name):
+                    add(name, arm(op, ws, wa, False), ws, wa)
                 if wa < ws:
-                    add(f"swag/{op}_ws{ws}_wa{wa}_panes",
-                        arm(op, ws, wa, True), ws, wa)
+                    name = f"swag/{op}_ws{ws}_wa{wa}_panes"
+                    if want(name):
+                        add(name, arm(op, ws, wa, True), ws, wa)
 
     # per-group windows on the shared pane store: sweep num_groups x WS_g
     # (ws_per_group as a uniform int; throughput = stream tuples ingested,
@@ -82,6 +94,9 @@ def run() -> list[dict]:
         gp = jnp.array(rng.integers(0, num_groups, n_pg).astype(np.int32))
         kp = jnp.array(rng.integers(0, 1000, n_pg).astype(np.int32))
         for ws_g in (256, 1024):
+            if not want(f"swag_per_group/sum_g{num_groups}_ws{ws_g}"
+                        f"_wa{wa_pg}"):
+                continue
             fn = pergroup_arm(num_groups, ws_g)
             us = time_fn(fn, gp, kp, iters=2, warmup=1)
             tput = n_pg / (us / 1e6)

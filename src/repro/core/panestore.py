@@ -65,6 +65,28 @@ PAD_GROUP = _engine.PAD_GROUP
 DIRECT_OPS = frozenset(
     {"sum", "count", "min", "max", "mean", "median", "distinct_count"})
 
+#: ops the **per-pane partial fast path** serves without tuple replay: their
+#: window value is a function of per-pane partial aggregates (set-based, so
+#: the pane sort order is irrelevant), so evaluation never touches the merge
+#: network.  median/distinct_count stay on the merge-replay path — they need
+#: the full sorted window.
+PANE_PARTIAL_OPS = frozenset({"sum", "count", "min", "max", "mean"})
+
+
+def partial_path_names(names, key_dtype) -> list:
+    """Which ops ride the per-pane partial fast path (True) vs merge-replay
+    (False) for this key dtype — the per-group mirror of
+    :func:`repro.core.swag.pane_table_channel`'s predicate.
+
+    Float sums (and mean, which divides one) combine per-pane partials in a
+    different order than the merged-window reduction, so on float keys they
+    stay on the merge path (bit-exactness over ~ulp drift); float
+    min/max/count are order-invariant and keep the fast path."""
+    reorder_sensitive = jnp.issubdtype(jnp.dtype(key_dtype), jnp.floating)
+    return [isinstance(nm, str) and nm in PANE_PARTIAL_OPS
+            and not (reorder_sensitive and nm in ("sum", "mean"))
+            for nm in names]
+
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
@@ -213,57 +235,54 @@ def init_store(spec: PaneStoreSpec, key_dtype=jnp.int32) -> PaneStoreState:
     )
 
 
-def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
-              live: Array, counters=None):
-    """Absorb one tuple (no-op when ``live`` is False) — the store's unit of
-    worst-case-constant work: locate the open pane via the index, append,
-    sort-on-close, retire dead panes, evict the globally oldest on overflow.
+def _push_decide(spec: PaneStoreSpec, owner: Array, count: Array,
+                 base: Array, stamp: Array, clock: Array, g: Array, live):
+    """The directory half of one push: slot choice, count/owner/base/stamp
+    bookkeeping, retirement and eviction — everything about absorbing one
+    tuple that never reads the ``[C, WA]`` ring buffers.  Shared by
+    :func:`_push_one` (full state) and the batched evaluation path's
+    directory-only scan (``repro.core.swag``), so placement policy cannot
+    drift between them.
 
-    With ``counters`` (an :mod:`repro.obs.counters` dict) returns
-    ``(state, counters)`` recording evictions and the occupancy high-water
-    mark; ``None`` (the default) traces exactly the pre-observability ops.
+    Returns ``((owner, count, base, stamp, clock), slot, lane, m_g, alloc,
+    closes, evicted)``: the updated directory columns, the written slot and
+    lane, the new tuple's within-group seq, whether a fresh slot was
+    allocated, whether the write closed the pane (the sort trigger), and
+    whether the allocation evicted a live pane.
     """
-    c, wa = spec.capacity, spec.wa
-    g = g.astype(jnp.int32)
+    wa = spec.wa
 
-    mine = st.owner == g
+    mine = owner == g
     any_mine = jnp.any(mine)
     # the index: the group's newest slot is its max-base slot
-    newest = jnp.argmax(jnp.where(mine, st.base, -1))
-    m_g = jnp.where(any_mine, st.base[newest] + st.count[newest],
+    newest = jnp.argmax(jnp.where(mine, base, -1))
+    m_g = jnp.where(any_mine, base[newest] + count[newest],
                     jnp.zeros((), jnp.int32))
-    has_open = any_mine & (st.count[newest] < wa)
+    has_open = any_mine & (count[newest] < wa)
 
     # allocation target when no open pane: first free slot, else evict the
     # globally oldest pane (min stamp) — the approximation knob
-    free = st.owner == PAD_GROUP
+    free = owner == PAD_GROUP
     any_free = jnp.any(free)
     imax = jnp.iinfo(jnp.int32).max
-    oldest = jnp.argmin(jnp.where(free, imax, st.stamp))
+    oldest = jnp.argmin(jnp.where(free, imax, stamp))
     slot = jnp.where(has_open, newest,
                      jnp.where(any_free, jnp.argmax(free), oldest))
+    lane = jnp.where(has_open, count[slot], 0)
 
-    lane = jnp.where(has_open, st.count[slot], 0)
-    onehot = jnp.arange(c) == slot
-    at = onehot[:, None] & (jnp.arange(wa)[None, :] == lane)
+    alloc = live & ~has_open
+    new_count = count.at[slot].set(
+        jnp.where(live, jnp.where(has_open, count[slot] + 1, 1),
+                  count[slot]))
+    new_owner = owner.at[slot].set(jnp.where(alloc, g, owner[slot]))
+    new_base = base.at[slot].set(jnp.where(alloc, m_g, base[slot]))
+    new_stamp = stamp.at[slot].set(jnp.where(alloc, clock, stamp[slot]))
+    new_clock = clock + alloc.astype(jnp.int32)
 
-    new_keys = jnp.where(at & live, jnp.broadcast_to(k, st.keys.shape),
-                         st.keys)
-    new_seqs = jnp.where(at & live, m_g, st.seqs)
-    new_count = jnp.where(onehot & live,
-                          jnp.where(has_open, st.count + 1, 1), st.count)
-    new_owner = jnp.where(onehot & live & ~has_open, g, st.owner)
-    new_base = jnp.where(onehot & live & ~has_open, m_g, st.base)
-    new_stamp = jnp.where(onehot & live & ~has_open, st.clock, st.stamp)
-    clock = st.clock + (live & ~has_open).astype(jnp.int32)
-
-    # sort the pane once, the moment it closes (seq rides as payload)
+    # the close test reads the pre-retirement count: a pane that closes and
+    # instantly retires (ws_g < wa) still sorts first — state bit-exactness
+    # vs the historical single-step update demands the same order
     closes = live & (new_count[slot] == wa)
-    row_k, row_s = new_keys[slot], new_seqs[slot]
-    order = jnp.argsort(row_k, stable=True)
-    sorted_row = onehot[:, None] & jnp.ones((1, wa), bool)
-    new_keys = jnp.where(sorted_row & closes, row_k[order][None, :], new_keys)
-    new_seqs = jnp.where(sorted_row & closes, row_s[order][None, :], new_seqs)
 
     # retire this group's panes that no longer intersect its last WS_g
     ws_g = spec.ws_of(g)
@@ -273,16 +292,52 @@ def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
     new_count = jnp.where(dead, 0, new_count)
     new_stamp = jnp.where(dead, -1, new_stamp)
 
-    new_state = PaneStoreState(new_owner, new_keys, new_seqs, new_count,
-                               new_base, new_stamp, clock)
+    evicted = live & ~has_open & ~any_free
+    return ((new_owner, new_count, new_base, new_stamp, new_clock),
+            slot, lane, m_g, alloc, closes, evicted)
+
+
+def _push_one(spec: PaneStoreSpec, st: PaneStoreState, g: Array, k: Array,
+              live: Array, counters=None):
+    """Absorb one tuple (no-op when ``live`` is False) — the store's unit of
+    worst-case-constant work: locate the open pane via the index, append,
+    sort-on-close, retire dead panes, evict the globally oldest on overflow.
+
+    O(C + WA) per step: the directory update (:func:`_push_decide`), one
+    dynamic lane write, and a close-time row sort under ``lax.cond`` —
+    never a ``[C, WA]`` broadcast (the full-buffer rewrite per tuple was
+    the per-group throughput cliff).
+
+    With ``counters`` (an :mod:`repro.obs.counters` dict) returns
+    ``(state, counters)`` recording evictions and the occupancy high-water
+    mark; ``None`` (the default) traces exactly the pre-observability ops.
+    """
+    g = g.astype(jnp.int32)
+    (owner, count, base, stamp, clock), slot, lane, m_g, _alloc, closes, \
+        evicted = _push_decide(spec, st.owner, st.count, st.base, st.stamp,
+                               st.clock, g, live)
+
+    keys = st.keys.at[slot, lane].set(
+        jnp.where(live, k, st.keys[slot, lane]))
+    seqs = st.seqs.at[slot, lane].set(
+        jnp.where(live, m_g, st.seqs[slot, lane]))
+
+    # sort the pane once, the moment it closes (seq rides as payload)
+    def _sort_row(ks):
+        kk, ss = ks
+        order = jnp.argsort(kk[slot], stable=True)
+        return (kk.at[slot].set(kk[slot][order]),
+                ss.at[slot].set(ss[slot][order]))
+
+    keys, seqs = jax.lax.cond(closes, _sort_row, lambda ks: ks, (keys, seqs))
+
+    new_state = PaneStoreState(owner, keys, seqs, count, base, stamp, clock)
     if counters is None:
         return new_state
     from repro.obs import counters as _c
-    evicted = live & ~has_open & ~any_free
     counters = _c.bump(counters, "pane_evictions", evicted.astype(jnp.int32))
     counters = _c.high_water(counters, "pane_occupancy_hwm",
-                             jnp.sum((new_owner != PAD_GROUP)
-                                     .astype(jnp.int32)))
+                             jnp.sum((owner != PAD_GROUP).astype(jnp.int32)))
     return new_state, counters
 
 
@@ -331,7 +386,7 @@ def _push_one_time(spec: PaneStoreSpec, st: PaneStoreState, g: Array,
     ``(group, pane)`` denser than ``wa`` tuples chains a fresh slot with
     the same pane id.  Same worst-case-constant work per cycle as
     :func:`_push_one`."""
-    c, wa = spec.capacity, spec.wa
+    wa = spec.wa
     g = g.astype(jnp.int32)
     t = t.astype(jnp.int32)
     pid = jnp.floor_divide(t, spec.slide)
@@ -349,26 +404,32 @@ def _push_one_time(spec: PaneStoreSpec, st: PaneStoreState, g: Array,
                      jnp.where(any_free, jnp.argmax(free), oldest))
 
     lane = jnp.where(has_open, st.count[slot], 0)
-    onehot = jnp.arange(c) == slot
-    at = onehot[:, None] & (jnp.arange(wa)[None, :] == lane)
+    alloc = lv & ~has_open
+    new_count = st.count.at[slot].set(
+        jnp.where(lv, jnp.where(has_open, st.count[slot] + 1, 1),
+                  st.count[slot]))
+    new_owner = st.owner.at[slot].set(jnp.where(alloc, g, st.owner[slot]))
+    new_base = st.base.at[slot].set(jnp.where(alloc, pid, st.base[slot]))
+    new_stamp = st.stamp.at[slot].set(
+        jnp.where(alloc, st.clock, st.stamp[slot]))
+    clock = st.clock + alloc.astype(jnp.int32)
 
-    new_keys = jnp.where(at & lv, jnp.broadcast_to(k, st.keys.shape),
-                         st.keys)
-    new_seqs = jnp.where(at & lv, t, st.seqs)
-    new_count = jnp.where(onehot & lv,
-                          jnp.where(has_open, st.count + 1, 1), st.count)
-    new_owner = jnp.where(onehot & lv & ~has_open, g, st.owner)
-    new_base = jnp.where(onehot & lv & ~has_open, pid, st.base)
-    new_stamp = jnp.where(onehot & lv & ~has_open, st.clock, st.stamp)
-    clock = st.clock + (lv & ~has_open).astype(jnp.int32)
+    new_keys = st.keys.at[slot, lane].set(
+        jnp.where(lv, k, st.keys[slot, lane]))
+    new_seqs = st.seqs.at[slot, lane].set(
+        jnp.where(lv, t, st.seqs[slot, lane]))
 
     # sort the pane once, the moment it closes (timestamp rides as payload)
     closes = lv & (new_count[slot] == wa)
-    row_k, row_s = new_keys[slot], new_seqs[slot]
-    order = jnp.argsort(row_k, stable=True)
-    sorted_row = onehot[:, None] & jnp.ones((1, wa), bool)
-    new_keys = jnp.where(sorted_row & closes, row_k[order][None, :], new_keys)
-    new_seqs = jnp.where(sorted_row & closes, row_s[order][None, :], new_seqs)
+
+    def _sort_row(ks):
+        kk, ss = ks
+        order = jnp.argsort(kk[slot], stable=True)
+        return (kk.at[slot].set(kk[slot][order]),
+                ss.at[slot].set(ss[slot][order]))
+
+    new_keys, new_seqs = jax.lax.cond(closes, _sort_row, lambda ks: ks,
+                                      (new_keys, new_seqs))
 
     # watermark-driven retirement: the pane [base*slide, (base+1)*slide)
     # can never again intersect a window once it is wholly below the horizon
@@ -447,32 +508,15 @@ class ReplayRuns(NamedTuple):
     num_groups: Array  # [] int32
 
 
-def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
-                eval_time: Array | None = None) -> ReplayRuns:
-    """The per-group pane index, materialised: order the slot directory by
-    (owner, base), dedupe owners, and hand each group its (static-width)
-    pane subset as presorted runs with a liveness mask.
-
-    Open panes (arrival-ordered) are sorted here — every *closed* pane was
-    sorted exactly once at close, so the sort-once amortisation holds.
-
-    Time mode takes ``eval_time`` and masks by the stored timestamps: a
-    lane is live iff its tuple falls in ``[eval_time - time_range,
-    eval_time)`` (every group shares the one time window, so no per-group
-    ``m_g``/``WS_g`` bookkeeping applies).
-    """
-    c, wa = spec.capacity, spec.wa
-    s = spec.runs
-    sentinel = _key_sentinel(state.keys.dtype)
-    if spec.is_time:
-        if eval_time is None:
-            raise ValueError("time-mode stores gather against a watermark: "
-                             "pass eval_time=")
-        et = jnp.asarray(eval_time, jnp.int32)
-    elif eval_time is not None:
-        raise ValueError("eval_time only applies to time-mode stores")
-
-    so, sb, perm = jax.lax.sort(
+def _slot_directory(state: PaneStoreState):
+    """The per-group pane index, materialised once per evaluation: sort the
+    slot directory by (owner, base) and dedupe owners.  Returns ``(perm,
+    ugroups, offsets, nslots, num, n_occ)`` — the (owner, base)-sorted slot
+    permutation, the unique live group ids (ascending, PAD tail), each
+    group's first position in ``perm`` and its slot count, the live-group
+    count and the occupied-slot count."""
+    c = state.owner.shape[0]
+    so, _sb, perm = jax.lax.sort(
         (state.owner, state.base, jnp.arange(c, dtype=jnp.int32)),
         num_keys=2)
     occupied = so != PAD_GROUP
@@ -490,8 +534,62 @@ def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
     next_off = jnp.concatenate([offsets[1:], jnp.full((1,), c, jnp.int32)])
     nslots = jnp.where(jnp.arange(c) < num,
                        jnp.minimum(next_off, n_occ) - offsets, 0)
+    return perm, ugroups, offsets, nslots, num, n_occ
 
+
+def _slot_sorted(spec: PaneStoreSpec, state: PaneStoreState):
+    """Per-slot replay view of the ring buffers: every *closed* pane is
+    already key-sorted (sorted once at close); open panes get their dead
+    lanes pushed to the tail and sorted here — once per **slot**, instead of
+    once per replay row (the per-row sort repeated each open pane's work
+    ``S`` times).  Returns ``(keys, seqs, filled)``, each ``[C, WA]``, with
+    every row a presorted ascending run."""
+    wa = spec.wa
+    sentinel = _key_sentinel(state.keys.dtype)
     lanes = jnp.arange(wa)[None, :]
+    filled = lanes < state.count[:, None]
+    sk = jnp.where(filled, state.keys, sentinel)
+    order = jnp.argsort(sk, axis=-1, stable=True)
+    srt_k = jnp.take_along_axis(sk, order, axis=-1)
+    srt_s = jnp.take_along_axis(state.seqs, order, axis=-1)
+    srt_f = jnp.take_along_axis(filled, order, axis=-1)
+    is_sorted = (state.count == wa)[:, None]    # closed => sorted once
+    return (jnp.where(is_sorted, state.keys, srt_k),
+            jnp.where(is_sorted, state.seqs, srt_s),
+            jnp.where(is_sorted, filled, srt_f))
+
+
+def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
+                eval_time: Array | None = None) -> ReplayRuns:
+    """The per-group pane index, applied: order the slot directory by
+    (owner, base), dedupe owners, and hand each group its (static-width)
+    pane subset as presorted runs with a liveness mask.
+
+    Open panes (arrival-ordered) are sorted at the slot level
+    (:func:`_slot_sorted`) — every *closed* pane was sorted exactly once at
+    close, so the sort-once amortisation holds.  A padded row (slot index
+    past the group's count) may gather another slot's real keys rather than
+    sentinels; its ``slot_ok`` mask is False, every run is still ascending,
+    and the merge + compaction outputs depend only on the live lanes, so
+    the replayed window is unchanged.
+
+    Time mode takes ``eval_time`` and masks by the stored timestamps: a
+    lane is live iff its tuple falls in ``[eval_time - time_range,
+    eval_time)`` (every group shares the one time window, so no per-group
+    ``m_g``/``WS_g`` bookkeeping applies).
+    """
+    c, wa = spec.capacity, spec.wa
+    s = spec.runs
+    if spec.is_time:
+        if eval_time is None:
+            raise ValueError("time-mode stores gather against a watermark: "
+                             "pass eval_time=")
+        et = jnp.asarray(eval_time, jnp.int32)
+    elif eval_time is not None:
+        raise ValueError("eval_time only applies to time-mode stores")
+
+    perm, ugroups, offsets, nslots, num, _n_occ = _slot_directory(state)
+    keys_v, seqs_v, filled_v = _slot_sorted(spec, state)
 
     def row(r):
         g = ugroups[r]
@@ -499,22 +597,9 @@ def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
         j = jnp.arange(s)
         sidx = perm[jnp.clip(o + j, 0, c - 1)]
         slot_ok = j < ns
-        rk = state.keys[sidx]                      # [S, WA]
-        rs = state.seqs[sidx]
-        rc = jnp.where(slot_ok, state.count[sidx], 0)
-
-        filled = lanes < rc[:, None]
-        # open (and padded) runs: push dead lanes to the tail and sort, so
-        # every run is a presorted ascending sequence for the merge network
-        is_sorted = rc == wa                        # closed => sorted once
-        sk = jnp.where(filled, rk, sentinel)
-        order = jnp.argsort(sk, axis=-1, stable=True)
-        srt_k = jnp.take_along_axis(sk, order, axis=-1)
-        srt_s = jnp.take_along_axis(rs, order, axis=-1)
-        srt_f = jnp.take_along_axis(filled, order, axis=-1)
-        rk = jnp.where(is_sorted[:, None], rk, srt_k)
-        rs = jnp.where(is_sorted[:, None], rs, srt_s)
-        filled = jnp.where(is_sorted[:, None], filled, srt_f)
+        rk = keys_v[sidx]                          # [S, WA]
+        rs = seqs_v[sidx]
+        filled = filled_v[sidx]
 
         if spec.is_time:
             # rs holds timestamps: live iff in the evaluation window
@@ -524,6 +609,7 @@ def gather_runs(spec: PaneStoreSpec, state: PaneStoreState,
             # rs holds within-group seqs: newest slot is the last occupied
             # one (base-ascending order); stale lanes masked dead
             rb = state.base[sidx]
+            rc = jnp.where(slot_ok, state.count[sidx], 0)
             last = jnp.clip(ns - 1, 0, s - 1)
             m_g = jnp.where(ns > 0, rb[last] + rc[last], 0)
             lo = m_g - spec.ws_of(g)
@@ -581,8 +667,13 @@ def _direct_tails(keys_c: Array, cnt: Array, names, *, key_dtype,
             v = jnp.sum(jnp.where(lane == cnt - 1, keys_c, 0))
             out[name] = jnp.where(nonempty, v, 0).astype(keys_c.dtype)
         elif name == "mean":
-            s = jnp.sum(jnp.where(live, keys_c, 0).astype(jnp.float32))
-            out[name] = s / jnp.maximum(cnt, 1).astype(jnp.float32)
+            # sum in the combiner's accumulator dtype (exact for int keys),
+            # divide once — the same formula the per-pane partial fast path
+            # uses, so both paths produce bit-identical means
+            acc = get_combiner("sum").lift(jnp.zeros((), key_dtype)).dtype
+            s = jnp.sum(jnp.where(live, keys_c, 0).astype(acc))
+            out[name] = (s.astype(jnp.float32)
+                         / jnp.maximum(cnt, 1).astype(jnp.float32))
         elif name == "median":
             lo = jnp.sum(jnp.where(lane == jnp.maximum(cnt - 1, 0) // 2,
                                    keys_c, 0))
@@ -603,43 +694,150 @@ def _direct_tails(keys_c: Array, cnt: Array, names, *, key_dtype,
     return out
 
 
+def replay_rows(spec: PaneStoreSpec, run_keys: Array, run_valid: Array,
+                ops, names, *, key_dtype, interpolate: bool):
+    """Merge + tails over ``[R, S*WA]`` gathered replay rows — the batched
+    form of :func:`replay`'s merge path (``R = NE * C`` when the per-group
+    batch entry evaluates every chunk's rows in one pass).  Returns
+    ``({name: values [R]}, cnt [R])``."""
+    fallback = [(op, nm) for op, nm in zip(ops, names)
+                if nm not in DIRECT_OPS]
+    direct = [nm for nm in names if nm in DIRECT_OPS]
+
+    def row(rk, rv):
+        kc, cnt = merged_window(spec, rk, rv)
+        vals = _direct_tails(kc, cnt, direct, key_dtype=key_dtype,
+                             interpolate=interpolate)
+        if fallback:
+            gc = jnp.where(jnp.arange(kc.shape[-1]) < cnt, 0, PAD_GROUP)
+            for op, nm in fallback:
+                r = _engine._group_by_aggregate(gc, kc, op)
+                vals[nm] = r.values[0]
+        return vals, cnt
+
+    return jax.vmap(row)(run_keys, run_valid)
+
+
+def _replay_partials(spec: PaneStoreSpec, state: PaneStoreState, names):
+    """The per-pane partial fast path (count mode): every
+    :data:`PANE_PARTIAL_OPS` value from per-slot masked partial aggregates
+    — O(C·WA + C²) elementwise work, no S·WA-wide merge network and no
+    per-row pane gather.  The partials are set-based, so neither the pane
+    sort order nor the merge matters; the merge-replay path stays reserved
+    for median/distinct_count (and float sum/mean — see
+    :func:`partial_path_names`).
+
+    Bit-exact vs the merge path for every op it serves: integer sums
+    accumulate in the combiner's accumulator dtype, min/max/count are
+    order-invariant, and mean derives from the exact sum the same way
+    :func:`_direct_tails` does.
+
+    Returns ``(ugroups [C], {name: values [C]}, valid [C], num)`` in the
+    same row layout as the merge path (:func:`_slot_directory` rows).
+    """
+    wa = spec.wa
+    c = state.owner.shape[0]
+    occ = state.owner != PAD_GROUP
+    imin = jnp.iinfo(jnp.int32).min
+    # per-slot m_g of the slot's owner: within a group, pane bases are
+    # contiguous (retirement and eviction both free the oldest pane first),
+    # so the owner's newest pane maximises base + count over its slots
+    span = jnp.where(occ, state.base + state.count, imin)
+    same = occ[:, None] & (state.owner[:, None] == state.owner[None, :])
+    m = jnp.max(jnp.where(same, span[None, :], imin), axis=1)
+    lo = m - spec.ws_of(state.owner)
+
+    lanes = jnp.arange(wa)[None, :]
+    live = (occ[:, None] & (lanes < state.count[:, None])
+            & (state.seqs >= lo[:, None]))
+
+    _perm, ugroups, _off, _ns, num, _n_occ = _slot_directory(state)
+    rows = ((ugroups[:, None] == state.owner[None, :]) & occ[None, :]
+            & (ugroups[:, None] != PAD_GROUP))
+
+    key_dtype = state.keys.dtype
+    hi = _key_sentinel(key_dtype)
+    lo_sent = (jnp.iinfo(key_dtype).min
+               if jnp.issubdtype(key_dtype, jnp.integer) else -jnp.inf)
+
+    pc = jnp.sum(live.astype(jnp.int32), axis=1)             # [C] per slot
+    cnt = jnp.sum(jnp.where(rows, pc[None, :], 0), axis=1)   # [C] per row
+    rsum = None
+    if any(nm in ("sum", "mean") for nm in names):
+        acc = get_combiner("sum").lift(jnp.zeros((), key_dtype)).dtype
+        psum = jnp.sum(jnp.where(live, state.keys, 0).astype(acc), axis=1)
+        rsum = jnp.sum(jnp.where(rows, psum[None, :],
+                                 jnp.zeros((), acc)), axis=1)
+    out = {}
+    for name in names:
+        if name == "count":
+            out[name] = cnt
+        elif name == "sum":
+            out[name] = rsum
+        elif name == "mean":
+            out[name] = (rsum.astype(jnp.float32)
+                         / jnp.maximum(cnt, 1).astype(jnp.float32))
+        elif name == "min":
+            pmin = jnp.min(jnp.where(live, state.keys, hi), axis=1)
+            v = jnp.min(jnp.where(rows, pmin[None, :], hi), axis=1)
+            out[name] = jnp.where(cnt > 0, v,
+                                  jnp.zeros((), key_dtype)).astype(key_dtype)
+        elif name == "max":
+            pmax = jnp.max(jnp.where(live, state.keys, lo_sent), axis=1)
+            v = jnp.max(jnp.where(rows, pmax[None, :], lo_sent), axis=1)
+            out[name] = jnp.where(cnt > 0, v,
+                                  jnp.zeros((), key_dtype)).astype(key_dtype)
+        else:  # pragma: no cover - guarded by partial_path_names
+            raise ValueError(f"{name} is not a partial-path op")
+    valid = jnp.arange(c) < num
+    return ugroups, out, valid, num
+
+
 def replay(spec: PaneStoreSpec, state: PaneStoreState, ops, *,
            interpolate: bool = False, eval_time: Array | None = None):
     """Evaluate every live group's window from the store (reference path).
 
     Returns ``(groups [C], {name: values [C]}, valid [C], num_groups)`` —
     the per-evaluation analogue of one :class:`repro.query.AggResult` row.
-    Ops are routed by *name*: DIRECT_OPS are computed straight off the
-    merged window (element-exact vs the naive keep-last-``WS_g``
-    reference; a :class:`Combiner` instance carrying one of those names is
-    assumed to mean the standard op); any other combiner falls back to an
-    engine pass over the merged, compacted window — exact vs a full
-    re-sort of the same window.
+    Ops are routed by *name*: :data:`PANE_PARTIAL_OPS` take the per-pane
+    partial fast path (:func:`_replay_partials` — no gather, no merge);
+    the remaining DIRECT_OPS are computed straight off the merged window
+    (element-exact vs the naive keep-last-``WS_g`` reference; a
+    :class:`Combiner` instance carrying one of those names is assumed to
+    mean the standard op); any other combiner falls back to an engine pass
+    over the merged, compacted window — exact vs a full re-sort of the
+    same window.
 
     Time mode evaluates the shared window ``[eval_time - time_range,
-    eval_time)`` (normally ``eval_time`` = the watermark).
+    eval_time)`` (normally ``eval_time`` = the watermark) and always
+    merge-replays (the shared time window has no per-group seq bounds).
     """
     names = [op.name if isinstance(op, Combiner) else op for op in ops]
-    runs = gather_runs(spec, state, eval_time=eval_time)
     key_dtype = state.keys.dtype
-
-    fallback = [(op, name) for op, name in zip(ops, names)
-                if name not in DIRECT_OPS]
-    direct = [name for name in names if name in DIRECT_OPS]
-
-    def row(g, rk, rv):
-        kc, cnt = merged_window(spec, rk, rv)
-        vals = _direct_tails(kc, cnt, direct, key_dtype=key_dtype,
-                             interpolate=interpolate)
-        if fallback:
-            gc = jnp.where(jnp.arange(kc.shape[-1]) < cnt, 0, PAD_GROUP)
-            for op, name in fallback:
-                r = _engine._group_by_aggregate(gc, kc, op)
-                vals[name] = r.values[0]
-        return vals, cnt
-
-    values, cnts = jax.vmap(row)(runs.groups, runs.run_keys, runs.run_valid)
     c = spec.capacity
+
+    psel = ([False] * len(names) if spec.is_time
+            else partial_path_names(names, key_dtype))
+    partial_names = [nm for nm, sel in zip(names, psel) if sel]
+    merge_pairs = [(op, nm) for (op, nm), sel in zip(zip(ops, names), psel)
+                   if not sel]
+
+    values = {}
+    if partial_names:
+        ugroups, pvals, pvalid, pnum = _replay_partials(spec, state,
+                                                        partial_names)
+        values.update(pvals)
+        if not merge_pairs:
+            values = {name: jnp.where(pvalid, v, jnp.zeros((), v.dtype))
+                      for name, v in values.items()}
+            return ugroups, values, pvalid, pnum
+
+    runs = gather_runs(spec, state, eval_time=eval_time)
+    mvals, cnts = replay_rows(
+        spec, runs.run_keys, runs.run_valid,
+        [op for op, _ in merge_pairs], [nm for _, nm in merge_pairs],
+        key_dtype=key_dtype, interpolate=interpolate)
+    values.update(mvals)
     valid = jnp.arange(c) < runs.num_groups
     if spec.is_time:
         # a group may still own slots while every one of its tuples sits

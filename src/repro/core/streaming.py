@@ -240,9 +240,16 @@ class StreamingAggregator:
         self.carry = _q.init_stream_state(self.plan, key_dtype,
                                           collect_stats=self.collect_stats)
         self.p_ports = p_ports
+        # donate the carry (arg 2): the pane-store ring buffers / rolling
+        # carries update in place instead of being copied every push —
+        # safe because push() immediately rebinds self.carry to the step's
+        # output and nothing else aliases the old buffers
         self._step = jax.jit(_q.stream_fn(self.plan, p_ports=p_ports,
                                           mesh=mesh,
-                                          collect_stats=self.collect_stats))
+                                          collect_stats=self.collect_stats),
+                             donate_argnums=(2,))
+        self._carry_leaves = len(jax.tree_util.tree_leaves(self.carry))
+        self._donated_buffers = 0
 
     def _base_carry(self):
         """The engine state, unwrapped from the (state, counters) pair the
@@ -254,7 +261,13 @@ class StreamingAggregator:
         when collecting; for event-time windows always at least the
         late-drop counter (it lives in the carry — reading it is free)."""
         if self.collect_stats:
-            return dict(self.carry[1])
+            stats = dict(self.carry[1])
+            # host-side gauge (not in the jit carry — the donation machinery
+            # is what it measures, so it must not change the carry pytree):
+            # carry buffers reused in place instead of copied, cumulative
+            stats["store_donated_buffers"] = jnp.asarray(
+                self._donated_buffers, jnp.int32)
+            return stats
         if self.window is not None and self.window.is_time:
             rstate = self._base_carry()[0]
             dropped = (jnp.sum(rstate.dropped) if self.num_shards > 1
@@ -290,6 +303,7 @@ class StreamingAggregator:
         else:
             (g, values, valid, num, rr), self.carry = self._step(
                 groups, keys, self.carry, n_valid)
+        self._donated_buffers += self._carry_leaves
         return StreamResult(g, values[self.combiner.name], valid, num, rr,
                             self._stats())
 

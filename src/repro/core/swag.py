@@ -372,8 +372,275 @@ def per_group_chunk_scan(spec, state, groups: Array, keys: Array, emit):
     return jax.lax.scan(step, state, (gc, kc))
 
 
+def _group_ranks(groups: Array):
+    """Within-group arrival rank of every tuple, plus the stable group-sort
+    permutation — vectorised, no per-tuple scan.  ``order`` sorts the
+    stream by group id with arrival order preserved inside each group, so
+    the tuple at sorted position ``i`` has rank ``i - start_of_its_group``
+    (segment starts recovered by a running max over start positions)."""
+    n = groups.shape[-1]
+    order = jnp.argsort(groups, stable=True).astype(jnp.int32)
+    sg = groups[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.ones((1,), bool), sg[1:] != sg[:-1]]) if n else \
+        jnp.zeros((0,), bool)
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(starts, pos, 0))
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(pos - seg_start)
+    return ranks, order, sg
+
+
+def _pergroup_dir_scan(spec, gc: Array, rc: Array, with_counters: bool):
+    """Directory-only push scan for the batched per-group path: thread just
+    the ``[C]`` bookkeeping columns (owner/count/base/stamp/clock) plus an
+    ``abase`` column through every tuple — never the ``[C, WA]`` ring
+    buffers — and emit one directory snapshot per WA chunk.
+
+    ``abase[s]`` is the **arrival rank** (within-group cumulative tuple
+    count) of slot ``s``'s first tuple.  The store's own ``base`` is a
+    store-local seq that resets to 0 when a group's panes are all evicted;
+    arrival ranks never reset, so windows derived from ``abase`` map 1:1
+    onto positions in the group-sorted stream across eviction epochs.
+    Placement decisions still use the store-seq ``base`` via the shared
+    :func:`repro.core.panestore._push_decide` — identical policy to the
+    reference scan by construction.
+
+    Returns ``(carry, (owner, abase, count) snapshots [NE, C])`` where
+    ``carry`` is ``(owner, count, base, abase, stamp, clock[, evictions])``
+    (the eviction counter rides only when ``with_counters``)."""
+    c = spec.capacity
+    init = (jnp.full((c,), _panestore.PAD_GROUP, jnp.int32),   # owner
+            jnp.zeros((c,), jnp.int32),                        # count
+            jnp.zeros((c,), jnp.int32),                        # base
+            jnp.zeros((c,), jnp.int32),                        # abase
+            jnp.full((c,), -1, jnp.int32),                     # stamp
+            jnp.zeros((), jnp.int32))                          # clock
+    if with_counters:
+        init = init + (jnp.zeros((), jnp.int32),)              # evictions
+
+    def tup(carry, x):
+        owner, count, base, abase, stamp, clock = carry[:6]
+        g, r = x
+        (owner, count, base, stamp, clock), slot, _lane, _m, alloc, \
+            _closes, evicted = _panestore._push_decide(
+                spec, owner, count, base, stamp, clock, g, True)
+        abase = abase.at[slot].set(jnp.where(alloc, r, abase[slot]))
+        out = (owner, count, base, abase, stamp, clock)
+        if with_counters:
+            out = out + (carry[6] + evicted.astype(jnp.int32),)
+        return out, None
+
+    def chunk(carry, x):
+        carry, _ = jax.lax.scan(tup, carry, x)
+        return carry, (carry[0], carry[3], carry[1])
+
+    return jax.lax.scan(chunk, init, (gc, rc))
+
+
+def _snapshot_directory(own_s: Array):
+    """Vectorised slot directory over ``[NE, C]`` owner snapshots: the
+    unique live group ids per evaluation (ascending, PAD tail) and their
+    count — the batched form of the dedupe in
+    :func:`repro.core.panestore._slot_directory`."""
+    ne, c = own_s.shape
+    pad = _panestore.PAD_GROUP
+    so = jnp.sort(own_s, axis=1)
+    occupied = so != pad
+    prev = jnp.concatenate(
+        [jnp.full((ne, 1), pad, jnp.int32), so[:, :-1]], axis=1)
+    firsts = occupied & ((so != prev) | (jnp.arange(c)[None, :] == 0))
+    num = jnp.sum(firsts.astype(jnp.int32), axis=1)
+    rank = jnp.cumsum(firsts.astype(jnp.int32), axis=1) \
+        - firsts.astype(jnp.int32)
+    scatter = jnp.where(firsts, rank, c)
+    ugroups = jax.vmap(
+        lambda s, v: jnp.full((c + 1,), pad, jnp.int32).at[s].set(
+            v, mode="drop")[:c])(scatter, so)
+    return ugroups, num
+
+
+def _pergroup_eval_windows(spec, own_s: Array, ab_s: Array, cnt_s: Array):
+    """Per-(evaluation, group-row) window bounds in **arrival-rank** units:
+    for each unique group of each snapshot, ``m`` is its arrival count and
+    ``lo = max(m - ws_g, amin)`` where ``amin`` is the arrival rank of the
+    oldest retained pane — eviction truncates the window, which is exactly
+    the paper's approximation knob showing up as a raised lower bound.
+    Returns ``(ugroups, num, valid, lo, m)``, all ``[NE, C]`` but ``num``.
+    """
+    pad = _panestore.PAD_GROUP
+    c = own_s.shape[1]
+    imin = jnp.iinfo(jnp.int32).min
+    imax = jnp.iinfo(jnp.int32).max
+    ugroups, num = _snapshot_directory(own_s)
+    occ = own_s != pad                                        # [NE, C]
+    samem = ((ugroups[:, :, None] == own_s[:, None, :]) & occ[:, None, :]
+             & (ugroups[:, :, None] != pad))                  # [NE, R, S]
+    span = ab_s + cnt_s                                       # [NE, S]
+    m = jnp.max(jnp.where(samem, span[:, None, :], imin), axis=2)
+    amin = jnp.min(jnp.where(samem, ab_s[:, None, :], imax), axis=2)
+    valid = jnp.arange(c)[None, :] < num[:, None]
+    lo = jnp.maximum(m - spec.ws_of(ugroups), amin)
+    return ugroups, num, valid, jnp.where(valid, lo, 0), \
+        jnp.where(valid, m, 0)
+
+
+def _sparse_table(x: Array, combine, sentinel):
+    """Range-query sparse table levels: ``t[l][i] = combine over
+    x[i : i + 2**l]`` (sentinel-padded past the end).  O(N log N) build,
+    O(1) per range query."""
+    n = x.shape[-1]
+    t = [x]
+    step = 1
+    while step < n:
+        cur = t[-1]
+        shifted = jnp.concatenate(
+            [cur[step:], jnp.full((step,), sentinel, cur.dtype)])[:n]
+        t.append(combine(cur, shifted))
+        step *= 2
+    return jnp.stack(t)
+
+
+def _sparse_query(table: Array, a: Array, length: Array, combine):
+    """``combine`` over ``x[a : a + length]`` (``length >= 1``) as two
+    overlapping power-of-two blocks; floor-log2 via count-leading-zeros
+    (exact, unlike a float log)."""
+    n = table.shape[-1]
+    length = jnp.maximum(length, 1)
+    lev = 31 - jax.lax.clz(length)
+    blk = jnp.left_shift(1, lev)
+    a1 = jnp.clip(a, 0, n - 1)
+    a2 = jnp.clip(a + length - blk, 0, n - 1)
+    return combine(table[lev, a1], table[lev, a2])
+
+
+def _pergroup_partial_values(spec, names, sk: Array, sg: Array,
+                             ugroups: Array, lo: Array, m: Array,
+                             valid: Array):
+    """Tuple-centric batched evaluation of the partial-path ops: each
+    (evaluation, group) window is the contiguous slice
+    ``[off_g + lo, off_g + m)`` of the group-sorted stream, so sums come
+    from one prefix sum (int wraparound cancels in the difference),
+    min/max from one sparse table, count from the bounds — O(1) per window
+    after O(N log N) shared prep, vs one gather + merge replay per window.
+    """
+    key_dtype = sk.dtype
+    n = sk.shape[-1]
+    off = jnp.searchsorted(sg, ugroups, side="left").astype(jnp.int32)
+    a = jnp.clip(off + lo, 0, n)
+    b = jnp.clip(off + m, 0, n)
+    cnt = jnp.where(valid, m - lo, 0)
+    rsum = None
+    if any(nm in ("sum", "mean") for nm in names):
+        acc = get_combiner("sum").lift(jnp.zeros((), key_dtype)).dtype
+        ps = jnp.concatenate([jnp.zeros((1,), acc),
+                              jnp.cumsum(sk.astype(acc))])
+        rsum = jnp.where(valid, ps[b] - ps[a], jnp.zeros((), acc))
+    out = {}
+    for nm in names:
+        if nm == "count":
+            out[nm] = cnt
+        elif nm == "sum":
+            out[nm] = rsum
+        elif nm == "mean":
+            out[nm] = (rsum.astype(jnp.float32)
+                       / jnp.maximum(cnt, 1).astype(jnp.float32))
+        elif nm == "min":
+            hi = _panestore._key_sentinel(key_dtype)
+            tbl = _sparse_table(jnp.asarray(sk), jnp.minimum, hi)
+            v = _sparse_query(tbl, a, b - a, jnp.minimum)
+            out[nm] = jnp.where(cnt > 0, v,
+                                jnp.zeros((), key_dtype)).astype(key_dtype)
+        elif nm == "max":
+            lo_s = (jnp.iinfo(key_dtype).min
+                    if jnp.issubdtype(key_dtype, jnp.integer) else -jnp.inf)
+            tbl = _sparse_table(jnp.asarray(sk), jnp.maximum, lo_s)
+            v = _sparse_query(tbl, a, b - a, jnp.maximum)
+            out[nm] = jnp.where(cnt > 0, v,
+                                jnp.zeros((), key_dtype)).astype(key_dtype)
+        else:  # pragma: no cover - guarded by partial_path_names
+            raise ValueError(f"{nm} is not a partial-path op")
+    return out
+
+
+def _reconstruct_store(spec, carry, sg: Array, sk: Array):
+    """Rebuild the ``[C, WA]`` ring buffers the directory-only scan never
+    materialised: lane ``l`` of an occupied slot holds the key at position
+    ``off(owner) + abase + l`` of the group-sorted stream with seq
+    ``base + l``, and closed panes re-apply the stable sort-at-close.
+    Freed slots keep init contents (their bytes are dead — the directory
+    masks them everywhere).  The result is a valid continuation state:
+    further pushes behave exactly as under the reference scan."""
+    owner, count, base, abase, stamp, clock = carry[:6]
+    wa = spec.wa
+    n = sg.shape[-1]
+    occ = owner != _panestore.PAD_GROUP
+    off = jnp.searchsorted(sg, owner, side="left").astype(jnp.int32)
+    lanes = jnp.arange(wa)[None, :]
+    fill = occ[:, None] & (lanes < count[:, None])
+    pos = jnp.clip(off[:, None] + abase[:, None] + lanes, 0,
+                   max(n - 1, 0))
+    keys = jnp.where(fill, sk[pos], jnp.zeros((), sk.dtype))
+    seqs = jnp.where(fill, base[:, None] + lanes, 0)
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    closed = (count == wa)[:, None]
+    keys = jnp.where(closed, jnp.take_along_axis(keys, order, axis=-1),
+                     keys)
+    seqs = jnp.where(closed, jnp.take_along_axis(seqs, order, axis=-1),
+                     seqs)
+    return _panestore.PaneStoreState(owner, keys, seqs, count, base,
+                                     stamp, clock)
+
+
+def pergroup_write_plan(spec, groups: Array):
+    """Everything the fused Pallas replay kernel needs, precomputed by one
+    XLA directory scan ("store bookkeeping in XLA", as with the gather
+    path): per-tuple write coordinates into the VMEM-resident ring
+    buffers, per-chunk directory snapshots with per-slot staleness bounds,
+    the close-sort mask, and the per-evaluation group directory.
+
+    Returns ``(slots, lanes, seqs [NE, WA]; own_s, cnt_s, lo_s, sortmask
+    [NE, C]; ugroups [NE, C], num [NE])`` — seq/lo in store-seq units (the
+    kernel masks within one epoch; freed slots are masked by ``own_s``).
+    """
+    ne = groups.shape[-1] // spec.wa
+    c = spec.capacity
+    pad = _panestore.PAD_GROUP
+    imin = jnp.iinfo(jnp.int32).min
+    gc = frame_panes(jnp.asarray(groups, jnp.int32), spec.wa, ne)
+
+    init = (jnp.full((c,), pad, jnp.int32), jnp.zeros((c,), jnp.int32),
+            jnp.zeros((c,), jnp.int32), jnp.full((c,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+    def tup(carry, g):
+        carry, slot, lane, m_g, _alloc, _closes, _ev = \
+            _panestore._push_decide(spec, *carry, g, True)
+        return carry, (slot, lane, m_g)
+
+    def chunk(carry, g):
+        carry, (slot, lane, seq) = jax.lax.scan(tup, carry, g)
+        owner, count, base, _stamp, _clock = carry
+        return carry, (slot, lane, seq, owner, count, base)
+
+    _carry, (slots, lanes, seqs, own_s, cnt_s, base_s) = \
+        jax.lax.scan(chunk, init, gc)
+
+    written = jnp.any(
+        slots[:, :, None] == jnp.arange(c)[None, None, :], axis=1)
+    sortmask = (cnt_s == spec.wa) & written
+    occ = own_s != pad
+    span = jnp.where(occ, base_s + cnt_s, imin)
+    samem = (occ[:, :, None] & (own_s[:, :, None] == own_s[:, None, :])
+             & occ[:, None, :])
+    m = jnp.max(jnp.where(samem, span[:, None, :], imin), axis=2)
+    lo_s = jnp.where(occ, m - spec.ws_of(own_s), 0)
+    ugroups, num = _snapshot_directory(own_s)
+    return slots, lanes, seqs, own_s, cnt_s, lo_s, sortmask, ugroups, num
+
+
 def swag_per_group(groups: Array, keys: Array, *, spec, ops,
-                   interpolate: bool = False, state=None):
+                   interpolate: bool = False, state=None, counters=None):
     """Per-group-window SWAG on the shared pane store (the paper's
     approximation for SWAG with per-group windows) — batch entry.
 
@@ -384,17 +651,118 @@ def swag_per_group(groups: Array, keys: Array, *, spec, ops,
     ``g``'s tuples — there is no single stream-level WS, so evaluations
     start with the first chunk.
 
+    Two batched regimes replace the historical one-replay-per-chunk scan:
+
+    * **partial path** (every op in
+      :data:`repro.core.panestore.PANE_PARTIAL_OPS`; float keys keep
+      sum/mean off it): a directory-only scan derives per-chunk window
+      bounds in arrival-rank units and all NE x C windows are evaluated at
+      once from the group-sorted stream (prefix sums / sparse tables) —
+      the ring buffers are reconstructed once at the end, never pushed
+      per chunk.
+    * **merge path** (median/distinct_count, engine-tail combiners, float
+      sum/mean, or a continued stream via ``state=``): the push scan emits
+      gathered runs per chunk, and ONE batched merge+tails pass evaluates
+      all NE x C replay rows after the scan instead of NE separate merges
+      inside it.  Any merge op present routes *all* ops through the merge
+      pass (one launch, and the same rows serve every op).
+
+    Both regimes are bit-exact vs the per-chunk reference (identical
+    placement policy through the shared ``_push_decide``; identical tail
+    formulas).  With ``counters`` (an :mod:`repro.obs.counters` dict)
+    returns ``(out, state, counters)``.
+
     Returns ``((groups, values, valid, num_groups), final_state)`` with a
     leading ``[num_evals = N // WA]`` axis and ``spec.capacity`` output
     slots per evaluation; ``state=None`` starts a fresh store (pass the
     previous state to continue a stream).
     """
+    names = [op.name if isinstance(op, Combiner) else op for op in ops]
+    keys = jnp.asarray(keys)
+    groups = jnp.asarray(groups, jnp.int32)
+    ne = groups.shape[-1] // spec.wa
+    psel = ([] if spec.is_time
+            else _panestore.partial_path_names(names, keys.dtype))
+    all_partial = bool(psel) and all(psel)
+
+    if counters is not None:
+        from repro.obs import counters as _c
+        counters = _c.put(counters, "pergroup_evals_batched",
+                          jnp.asarray(ne, jnp.int32))
+        counters = _c.put(counters, "pergroup_replay_rows_per_launch",
+                          jnp.asarray(ne * spec.capacity, jnp.int32))
+        counters = _c.put(
+            counters, "pergroup_partial_dispatch",
+            jnp.asarray(len(names) if (all_partial and state is None) else 0,
+                        jnp.int32))
+        counters = _c.put(
+            counters, "pergroup_merge_dispatch",
+            jnp.asarray(0 if (all_partial and state is None) else len(names),
+                        jnp.int32))
+
+    if all_partial and state is None and ne > 0:
+        ranks, order, sg = _group_ranks(groups)
+        sk = keys[order]
+        gc = frame_panes(groups, spec.wa, ne)
+        rc = frame_panes(ranks, spec.wa, ne)
+        carry, (own_s, ab_s, cnt_s) = _pergroup_dir_scan(
+            spec, gc, rc, counters is not None)
+        ugroups, num, valid, lo, m = _pergroup_eval_windows(
+            spec, own_s, ab_s, cnt_s)
+        values = _pergroup_partial_values(spec, names, sk, sg, ugroups,
+                                          lo, m, valid)
+        values = {nm: jnp.where(valid, v, jnp.zeros((), v.dtype))
+                  for nm, v in values.items()}
+        final = _reconstruct_store(spec, carry, sg, sk)
+        out = (ugroups, values, valid, num)
+        if counters is None:
+            return out, final
+        from repro.obs import counters as _c
+        counters = _c.bump(counters, "pane_evictions", carry[6])
+        counters = _c.ensure(counters, ("pane_occupancy_hwm",))
+        return out, final, counters
+
     if state is None:
-        state = _panestore.init_store(spec, jnp.asarray(keys).dtype)
-    state, out = per_group_chunk_scan(
-        spec, state, groups, keys,
-        lambda st: _panestore.replay(spec, st, ops, interpolate=interpolate))
-    return out, state
+        state = _panestore.init_store(spec, keys.dtype)
+    gc = frame_panes(groups, spec.wa, ne)
+    kc = frame_panes(keys.astype(state.keys.dtype), spec.wa, ne)
+
+    if counters is None:
+        def step(st, x):
+            g, k = x
+            st = _panestore.push(spec, st, g, k)
+            return st, _panestore.gather_runs(spec, st)
+
+        state, runs = jax.lax.scan(step, state, (gc, kc))
+    else:
+        from repro.obs import counters as _c
+        counters = _c.ensure(counters,
+                             ("pane_evictions", "pane_occupancy_hwm"))
+
+        def step_c(carry, x):
+            st, cnt = carry
+            g, k = x
+            st, cnt = _panestore.push(spec, st, g, k, counters=cnt)
+            return (st, cnt), _panestore.gather_runs(spec, st)
+
+        (state, counters), runs = jax.lax.scan(step_c, (state, counters),
+                                               (gc, kc))
+
+    c = spec.capacity
+    length = runs.run_keys.shape[-1]
+    mvals, _cnts = _panestore.replay_rows(
+        spec, runs.run_keys.reshape(ne * c, length),
+        runs.run_valid.reshape(ne * c, length),
+        list(ops), names, key_dtype=state.keys.dtype,
+        interpolate=interpolate)
+    valid = jnp.arange(c)[None, :] < runs.num_groups[:, None]
+    values = {nm: jnp.where(valid, v.reshape(ne, c),
+                            jnp.zeros((), v.dtype))
+              for nm, v in mvals.items()}
+    out = (runs.groups, values, valid, runs.num_groups)
+    if counters is None:
+        return out, state
+    return out, state, counters
 
 
 def window_tails(g: Array, k: Array, pairs, *, interpolate: bool = False):

@@ -134,9 +134,24 @@ def _pallas_panestore_supports(q) -> str | None:
     bad = sorted(op for op in q.op_names if op not in DIRECT_OPS)
     if bad:
         return (f"the pane-store kernel computes {sorted(DIRECT_OPS)} "
-                f"directly from the merged window; {bad} need the "
-                f"reference backend's engine-tail fallback")
+                f"directly (partial-fused for the partial-path ops, "
+                f"merge-replay otherwise); {bad} need the reference "
+                f"backend's engine-tail fallback")
     return None
+
+
+def pergroup_kernel_path(query, key_dtype=None) -> str:
+    """Which regime the pane-store kernel backend would run this per-group
+    query in: ``"partial-fused"`` (one fused push+replay launch, ring
+    buffers VMEM-resident) when every op rides the per-pane partial path,
+    else ``"merge-replay"`` (gather + one merge/compaction launch).  The
+    capability surface the planner and tests probe without executing."""
+    import jax.numpy as jnp
+
+    from repro.core.panestore import partial_path_names
+    psel = partial_path_names(
+        list(query.op_names), jnp.int32 if key_dtype is None else key_dtype)
+    return "partial-fused" if (psel and all(psel)) else "merge-replay"
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -200,15 +215,24 @@ def resolve_backend(explicit: str | None = None) -> str:
     return name
 
 
-def choose_backend(query, devices=None) -> str:
-    """Resolve ``auto`` for one query via the capability probe.
+def choose_backend(query, devices=None, num_shards: int = 1) -> str:
+    """Resolve ``auto`` for one query: **measured-cost routing** over the
+    capability-filtered candidates, with the static probe as fallback.
 
-    On CPU every kernel would run in Pallas interpret mode — a correctness
-    tool, orders of magnitude slower than the reference path — so ``auto``
-    stays on ``reference``.  On an accelerator the fused kernels win:
-    pane kernels when the window shape allows sharing sorted panes, the
-    re-sort kernel otherwise, the tiled groupagg kernel for non-windowed
-    queries.
+    The adaptive half: among the backends whose capability probe accepts
+    the query, consult :class:`repro.obs.registry.MetricsRegistry` for
+    observed tuples/s at this query's fingerprint and pick the fastest —
+    but only when **two or more** candidates have measured cells.  A
+    single cell proves nothing about the alternatives (and on CPU it
+    would usually be the reference path's own telemetry re-electing
+    itself), so anything less falls back to the static choice.
+
+    The static probe: on CPU every kernel would run in Pallas interpret
+    mode — a correctness tool, orders of magnitude slower than the
+    reference path — so ``auto`` stays on ``reference``.  On an
+    accelerator the fused kernels win: the pane-store kernel for
+    per-group windows, pane kernels when the window shape allows sharing
+    sorted panes, the re-sort kernel otherwise.
 
     ``devices`` makes the probe **device-aware**: pass the devices of the
     mesh a sharded query runs over and the choice reflects *their*
@@ -216,9 +240,24 @@ def choose_backend(query, devices=None) -> str:
     ``reference`` | ``pallas`` | ``pallas-panes`` locally, with its
     per-shard kernels unchanged.
     """
+    candidates = [name for name in ("pallas-panestore", "pallas-panes",
+                                    "pallas", "reference")
+                  if get_backend(name).supports(query) is None]
+
+    # measured-cost routing (lazy import: repro.obs must stay importable
+    # without the kernels package and vice versa)
+    from repro.obs.registry import METRICS, query_fingerprint
+    fp = query_fingerprint(query, num_shards=num_shards)
+    measured = [name for name in candidates
+                if METRICS.tuples_per_s(name, fp)]
+    if len(measured) >= 2:
+        best = METRICS.best_backend(fp, among=candidates)
+        if best is not None:
+            return best
+
     if common.is_cpu(devices):
         return "reference"
-    for name in ("pallas-panestore", "pallas-panes", "pallas"):
-        if get_backend(name).supports(query) is None:
+    for name in candidates:
+        if name != "reference":
             return name
     return "reference"

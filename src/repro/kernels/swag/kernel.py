@@ -270,6 +270,136 @@ def pergroup_replay_pallas(run_keys, run_valid, ops, *, run: int,
     return {name: o[:, 0] for name, o in zip(names, outs)}
 
 
+def _pergroup_fused_kernel(ck_ref, slot_ref, lane_ref, seq_ref, own_ref,
+                           cnt_ref, lo_ref, sm_ref, ug_ref, *refs,
+                           names, c, wa):
+    """One WA chunk of the fused push+replay pass: the pane-store ring
+    buffers live in VMEM scratch across the whole sequential grid, so each
+    chunk is ONE dispatch — scalar writes into the resident store, the
+    close-sort epilogue, then the per-pane partial evaluation — with no
+    store round trip through HBM between update and replay.
+
+    The *placement* decisions (slot/lane/seq per tuple, close/retire/evict
+    fallout as directory snapshots) arrive precomputed by the XLA
+    directory scan of :func:`repro.core.swag.pergroup_write_plan` — the
+    same bookkeeping-in-XLA split the gather path uses.  The evaluation
+    mirrors :func:`repro.core.panestore._replay_partials` formula-for-
+    formula, so outputs are bit-exact vs the reference partial path.
+
+    The close-sort runs lexicographically on ``(key, seq)``: lanes of a
+    closing pane hold strictly increasing seqs in arrival order, so the
+    2-key bitonic sort *is* the store's stable-by-key argsort (and keeps
+    values inside the comparisons, which XLA:CPU needs to compile the
+    network in reasonable time — see ``_swag_shared_partials``).
+    """
+    out_refs = refs[:len(names)]
+    kk_s, ss_s = refs[len(names):]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        kk_s[...] = jnp.zeros((c, wa), kk_s.dtype)
+        ss_s[...] = jnp.zeros((c, wa), jnp.int32)
+
+    def write(i, carry):
+        s = slot_ref[0, i]
+        l = lane_ref[0, i]
+        kk_s[s, l] = ck_ref[0, i]
+        ss_s[s, l] = seq_ref[0, i]
+        return carry
+
+    jax.lax.fori_loop(0, wa, write, 0)
+
+    kk = kk_s[...]
+    ss = ss_s[...]
+    sk, sq = common.bitonic_sort_tile((kk, ss), num_keys=2)
+    closing = (sm_ref[0, :] != 0)[:, None]
+    kk = jnp.where(closing, sk, kk)
+    ss = jnp.where(closing, sq, ss)
+    kk_s[...] = kk
+    ss_s[...] = ss
+
+    owner = own_ref[0, :]
+    count = cnt_ref[0, :]
+    lo = lo_ref[0, :]
+    ug = ug_ref[0, :]
+    occ = owner != PAD_GROUP
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (c, wa), 1)
+    live = occ[:, None] & (lanes < count[:, None]) & (ss >= lo[:, None])
+    rows = ((ug[:, None] == owner[None, :]) & occ[None, :]
+            & (ug[:, None] != PAD_GROUP))
+
+    key_dtype = kk.dtype
+    hi = _panestore._key_sentinel(key_dtype)
+    lo_sent = (jnp.iinfo(key_dtype).min
+               if jnp.issubdtype(key_dtype, jnp.integer) else -jnp.inf)
+    pc = jnp.sum(live.astype(jnp.int32), axis=1)
+    cnt = jnp.sum(jnp.where(rows, pc[None, :], 0), axis=1)
+    rsum = None
+    if any(nm in ("sum", "mean") for nm in names):
+        acc = get_combiner("sum").lift(jnp.zeros((), key_dtype)).dtype
+        psum = jnp.sum(jnp.where(live, kk, 0).astype(acc), axis=1)
+        rsum = jnp.sum(jnp.where(rows, psum[None, :],
+                                 jnp.zeros((), acc)), axis=1)
+    for name, ov_ref in zip(names, out_refs):
+        if name == "count":
+            ov_ref[0, :] = cnt
+        elif name == "sum":
+            ov_ref[0, :] = rsum
+        elif name == "mean":
+            ov_ref[0, :] = (rsum.astype(jnp.float32)
+                            / jnp.maximum(cnt, 1).astype(jnp.float32))
+        elif name == "min":
+            pmin = jnp.min(jnp.where(live, kk, hi), axis=1)
+            v = jnp.min(jnp.where(rows, pmin[None, :], hi), axis=1)
+            ov_ref[0, :] = jnp.where(cnt > 0, v, jnp.zeros(
+                (), key_dtype)).astype(key_dtype)
+        elif name == "max":
+            pmax = jnp.max(jnp.where(live, kk, lo_sent), axis=1)
+            v = jnp.max(jnp.where(rows, pmax[None, :], lo_sent), axis=1)
+            ov_ref[0, :] = jnp.where(cnt > 0, v, jnp.zeros(
+                (), key_dtype)).astype(key_dtype)
+        else:  # pragma: no cover - routed by partial_path_names
+            raise ValueError(f"{name} is not a partial-path op")
+
+
+def pergroup_fused_pallas(chunk_keys, slots, lanes, seqs, own_s, cnt_s,
+                          lo_s, sortmask, ugroups, ops, *, interpret):
+    """Fused push+replay over per-group pane chunks: the ring buffers stay
+    VMEM-resident across the sequential ``grid=(NE,)`` (Pallas scratch
+    persists between grid steps), so the historical per-chunk
+    update-store -> gather -> replay HBM round trip collapses into one
+    launch for the whole stream.
+
+    Inputs are :func:`repro.core.swag.pergroup_write_plan` outputs
+    (``chunk_keys/slots/lanes/seqs`` ``[NE, WA]``; directory snapshots
+    ``[NE, C]``); ``ops`` are partial-path names.  Returns
+    ``{name: [NE, C]}`` values (mask with the plan's ``num`` outside).
+    """
+    ne, wa = chunk_keys.shape
+    c = own_s.shape[1]
+    names = (ops,) if isinstance(ops, str) else tuple(ops)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_pergroup_fused_kernel, names=names, c=c, wa=wa)
+    wblock = pl.BlockSpec((1, wa), lambda i: (i, 0))
+    cblock = pl.BlockSpec((1, c), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kern,
+        grid=(ne,),
+        in_specs=[wblock] * 4 + [cblock] * 5,
+        out_specs=[cblock] * len(names),
+        out_shape=[jax.ShapeDtypeStruct(
+            (ne, c), _pergroup_out_dtype(name, chunk_keys.dtype))
+            for name in names],
+        scratch_shapes=[pltpu.VMEM((c, wa), chunk_keys.dtype),
+                        pltpu.VMEM((c, wa), jnp.int32)],
+        interpret=interpret,
+    )(chunk_keys, slots.astype(jnp.int32), lanes.astype(jnp.int32),
+      seqs.astype(jnp.int32), own_s, cnt_s, lo_s,
+      sortmask.astype(jnp.int32), ugroups)
+    return {name: o for name, o in zip(names, outs)}
+
+
 def _twostack_kernel(kf_ref, vf_ref, kb_ref, vb_ref, *out_refs, names):
     """The stack-flip step of the flip-batched two-stack SWAG, one epoch per
     grid row: an inclusive suffix scan over the epoch's front region and an

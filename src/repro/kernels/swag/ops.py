@@ -118,31 +118,55 @@ def _timeframe_kernel_exec(frames_g, frames_k, *, ops,
 @functools.partial(jax.jit, static_argnames=("spec", "ops", "interpret"))
 def _swag_pergroup_kernel_exec(groups, keys, *, spec, ops,
                                interpret: bool | None = None):
-    """Per-group-window SWAG with the replay offloaded to the Pallas
-    kernel: the store push + pane gather run in XLA (bookkeeping), and one
-    ``pallas_call`` (grid over evaluation x group rows) does the merge +
-    shared butterfly compaction + N operator tails in VMEM.
+    """Per-group-window SWAG with the replay offloaded to Pallas.  The
+    store *placement* bookkeeping always runs in XLA; the kernel side has
+    two regimes, routed by :func:`repro.core.panestore.partial_path_names`:
+
+    * **partial-fused** (every op on the partial path): ONE
+      ``pallas_call`` over the whole stream — the ring buffers live in
+      VMEM scratch across the sequential chunk grid, each step fusing the
+      store update (writes + close-sort epilogue) with the per-pane
+      partial evaluation.  No per-chunk store round trip through HBM.
+    * **merge-replay** (median/distinct_count present, or float
+      sum/mean): the classic gather path — store push + pane gather in
+      XLA, one ``pallas_call`` (grid over evaluation x group rows) for
+      merge + shared butterfly compaction + N operator tails.
 
     ``spec`` is a static :class:`repro.core.panestore.PaneStoreSpec`;
     ``ops`` a tuple of DIRECT_OPS names.  Returns
     ``(og [NE, C], {name: ov}, valid [NE, C], num_groups [NE])``.
     """
     from repro.core import panestore as _ps
-    from repro.core.swag import per_group_chunk_scan
+    from repro.core.swag import per_group_chunk_scan, pergroup_write_plan
     from repro.kernels.swag import kernel as _k
 
     interpret = _common.default_interpret(interpret)
     names = (ops,) if isinstance(ops, str) else tuple(ops)
-    state = _ps.init_store(spec, keys.dtype)
-    state, runs = per_group_chunk_scan(
-        spec, state, groups, keys, lambda st: _ps.gather_runs(spec, st))
-
-    ne, c = runs.groups.shape
+    ne = groups.shape[-1] // spec.wa
+    c = spec.capacity
     if ne == 0:
         return (jnp.full((0, c), PAD_GROUP, jnp.int32),
                 {name: jnp.zeros((0, c), _k._pergroup_out_dtype(
                     name, keys.dtype)) for name in names},
                 jnp.zeros((0, c), bool), jnp.zeros((0,), jnp.int32))
+
+    psel = _ps.partial_path_names(names, keys.dtype)
+    if psel and all(psel):
+        slots, lanes, seqs, own_s, cnt_s, lo_s, sortmask, ugroups, num = \
+            pergroup_write_plan(spec, groups)
+        ck = frame_panes(keys, spec.wa, ne)
+        ovs = _k.pergroup_fused_pallas(
+            ck, slots, lanes, seqs, own_s, cnt_s, lo_s, sortmask, ugroups,
+            names, interpret=interpret)
+        valid = jnp.arange(c)[None, :] < num[:, None]
+        values = {name: jnp.where(valid, v, jnp.zeros((), v.dtype))
+                  for name, v in ovs.items()}
+        og = jnp.where(valid, ugroups, PAD_GROUP)
+        return og, values, valid, num
+
+    state = _ps.init_store(spec, keys.dtype)
+    state, runs = per_group_chunk_scan(
+        spec, state, groups, keys, lambda st: _ps.gather_runs(spec, st))
 
     length = runs.run_keys.shape[-1]
     ovs = _k.pergroup_replay_pallas(

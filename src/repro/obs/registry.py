@@ -55,13 +55,18 @@ class MetricsRegistry:
             cell = self._cells.get((backend, fingerprint))
         return None if cell is None else cell.tuples_per_s
 
-    def best_backend(self, fingerprint: str) -> Optional[str]:
+    def best_backend(self, fingerprint: str,
+                     among=None) -> Optional[str]:
         """The backend with the highest observed tuples/s for this plan
-        shape — the measured-cost routing primitive (None: no data yet)."""
+        shape — the measured-cost routing primitive (None: no data yet).
+        ``among`` restricts the vote to a candidate set (the planner
+        passes its capability-filtered list so a stale cell for a backend
+        that can no longer run the query cannot win)."""
         with self._lock:
             candidates = [(cell.tuples_per_s, backend)
                           for (backend, fp), cell in self._cells.items()
-                          if fp == fingerprint and cell.seconds > 0]
+                          if fp == fingerprint and cell.seconds > 0
+                          and (among is None or backend in among)]
         if not candidates:
             return None
         return max(candidates)[1]
@@ -84,17 +89,24 @@ def get_registry() -> MetricsRegistry:
     return METRICS
 
 
-def plan_fingerprint(plan) -> str:
-    """A stable string identifying the *shape* of a plan — ops, grouping,
+def query_fingerprint(query, *, path: Optional[str] = None,
+                      num_shards: int = 1) -> str:
+    """A stable string identifying the *shape* of a query — ops, grouping,
     window framing, path, shard count — everything cost depends on except
     the backend (the backend is the other half of the registry key) and
-    the data itself."""
-    q = plan.query
+    the data itself.  ``path=None`` derives the execution path the planner
+    would assign (stream / window / engine), so ``choose_backend`` can
+    fingerprint a query *before* a plan exists and land on the exact key
+    ``execute(..., collect_stats=True)`` later records under."""
+    q = query
     w = q.window
+    if path is None:
+        path = ("stream" if q.streaming
+                else "window" if w is not None else "engine")
     bits = [f"ops={','.join(q.op_names)}",
             f"group_by={int(q.group_by)}",
-            f"path={plan.path}",
-            f"shards={plan.num_shards}"]
+            f"path={path}",
+            f"shards={num_shards}"]
     if w is not None:
         if w.is_time:
             bits.append(f"window=time:r{w.range}:s{w.slide}"
@@ -106,3 +118,10 @@ def plan_fingerprint(plan) -> str:
     if q.interpolate:
         bits.append("interpolate=1")
     return ";".join(bits)
+
+
+def plan_fingerprint(plan) -> str:
+    """:func:`query_fingerprint` of a materialised plan (byte-identical to
+    fingerprinting the plan's query with the plan's path/shards)."""
+    return query_fingerprint(plan.query, path=plan.path,
+                             num_shards=plan.num_shards)

@@ -479,7 +479,8 @@ def plan(query: Query, *, backend: str | None = None, num_shards: int = 1,
     name = _registry.resolve_backend(backend)
     note = ""
     if name == "auto":
-        name = _registry.choose_backend(query, devices)
+        name = _registry.choose_backend(query, devices,
+                                        num_shards=num_shards)
         note = "auto"
     reason = _registry.get_backend(name).supports(query)
     if reason is not None:
@@ -668,6 +669,19 @@ def stream_fn(p: Plan, *, p_ports: int = 4, mesh=None,
                 state, counters = _panestore.push(spec, state, groups, keys,
                                                   n_valid=n_valid,
                                                   counters=counters)
+                # which ops each push's evaluation dispatches on the
+                # per-pane partial fast path vs merge-replay (static per
+                # plan — gauge, not accumulator)
+                names = [op.name if isinstance(op, Combiner) else op
+                         for op in q.ops]
+                psel = ([False] * len(names) if spec.is_time else
+                        _panestore.partial_path_names(names,
+                                                      state.keys.dtype))
+                counters = _c.put(counters, "pergroup_partial_ops",
+                                  jnp.asarray(sum(psel), jnp.int32))
+                counters = _c.put(counters, "pergroup_merge_ops",
+                                  jnp.asarray(len(psel) - sum(psel),
+                                              jnp.int32))
             g, values, valid, num = _panestore.replay(
                 spec, state, q.ops, interpolate=q.interpolate)
             rr = jnp.where(valid, jnp.arange(spec.capacity) % p_ports, -1)
@@ -723,7 +737,9 @@ def _init_stream_counters(p: Plan) -> dict:
                        combine_round_bytes=jnp.zeros((rounds,), jnp.float32))
     if w is not None:
         return _c.init(pane_evictions=jnp.zeros((), jnp.int32),
-                       pane_occupancy_hwm=jnp.zeros((), jnp.int32))
+                       pane_occupancy_hwm=jnp.zeros((), jnp.int32),
+                       pergroup_partial_ops=jnp.zeros((), jnp.int32),
+                       pergroup_merge_ops=jnp.zeros((), jnp.int32))
     return _c.init(stream_tuples=jnp.zeros((), jnp.int32),
                    stream_emitted=jnp.zeros((), jnp.int32))
 
@@ -804,7 +820,8 @@ def _execute_engine(p: Plan, groups, keys, n_valid, *, tile, interpret):
     return AggResult(shared[0], values, shared[1], shared[2])
 
 
-def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
+def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret,
+                    counters=None):
     q = p.query
     w = q.window
     if w.per_group:
@@ -814,7 +831,31 @@ def _execute_window(p: Plan, groups, keys, *, use_xla_sort, interpret):
             og, ovs, valid, num = _swag_pergroup_kernel_exec(
                 groups, keys, spec=spec, ops=q.op_names,
                 interpret=interpret)
+            if counters is not None:
+                from repro.obs import counters as _c
+                names = list(q.op_names)
+                psel = _panestore.partial_path_names(
+                    names, jnp.asarray(keys).dtype)
+                ne = groups.shape[-1] // spec.wa
+                fused = bool(psel) and all(psel)
+                counters = _c.put(counters, "pergroup_evals_batched",
+                                  jnp.asarray(ne, jnp.int32))
+                counters = _c.put(counters,
+                                  "pergroup_replay_rows_per_launch",
+                                  jnp.asarray(ne * spec.capacity, jnp.int32))
+                counters = _c.put(counters, "pergroup_partial_dispatch",
+                                  jnp.asarray(len(names) if fused else 0,
+                                              jnp.int32))
+                counters = _c.put(counters, "pergroup_merge_dispatch",
+                                  jnp.asarray(0 if fused else len(names),
+                                              jnp.int32))
+                return AggResult(og, ovs, valid, num, counters)
             return AggResult(og, ovs, valid, num)
+        if counters is not None:
+            (og, values, valid, num), _, counters = swag_per_group(
+                groups, keys, spec=spec, ops=q.ops,
+                interpolate=q.interpolate, counters=counters)
+            return AggResult(og, values, valid, num, counters)
         (og, values, valid, num), _ = swag_per_group(
             groups, keys, spec=spec, ops=q.ops, interpolate=q.interpolate)
         return AggResult(og, values, valid, num)
@@ -1079,7 +1120,8 @@ def execute(plan_or_query, groups, keys=None, *, state=None, backend=None,
             else:
                 res = _execute_window(p, groups, keys,
                                       use_xla_sort=use_xla_sort,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      counters=counters)
             sp.attach(res)
     else:
         with _trace.span(f"dispatch:{p.backend}/engine") as sp:

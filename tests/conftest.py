@@ -51,6 +51,16 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _metrics_isolation():
+    """The metrics registry is process-global and ``choose_backend`` now
+    routes on it — clear it after every test so one test's telemetry can
+    never steer another's planning."""
+    yield
+    from repro.obs.registry import METRICS
+    METRICS.reset()
+
+
 def sorted_stream(rng, n, n_groups, key_max=1000, full_sort=False):
     g = np.sort(rng.integers(0, n_groups, n)).astype(np.int32)
     k = rng.integers(0, key_max, n).astype(np.int32)

@@ -328,3 +328,108 @@ def test_env_backend_validated_eagerly(monkeypatch):
     assert resolve_backend() == "auto"
     with pytest.raises(ValueError, match="unknown backend 'bogus'"):
         resolve_backend("bogus")
+
+
+# ---------------------------------------------------------------------------
+# measured-cost backend routing: choose_backend consults the registry
+
+
+def test_query_fingerprint_matches_plan_fingerprint():
+    """choose_backend fingerprints a query *before* a plan exists; the key
+    must be byte-identical to the one execute() later records under."""
+    from repro.obs.registry import query_fingerprint
+    for q, shards in [
+        (Query(ops=("sum", "min")), 1),
+        (Query(ops=("sum",), window=Window(ws=64, wa=16)), 2),
+        (Query(ops=("sum",), window=Window(ws=16, wa=4,
+                                           ws_per_group={0: 8})), 1),
+        (Query(ops=("sum",), streaming=True), 1),
+    ]:
+        p = plan(q, backend="reference", num_shards=shards)
+        assert query_fingerprint(q, num_shards=shards) == plan_fingerprint(p)
+
+
+def test_choose_backend_consults_metrics():
+    """The S1 wiring: with a seeded registry, auto routing picks the
+    measured-fastest *capable* backend; with fewer than two measured
+    candidates it falls back to the static capability probe."""
+    from repro.kernels.registry import choose_backend
+    from repro.obs.registry import METRICS, query_fingerprint
+    q = Query(ops=("sum",), window=Window(ws=16, wa=4, ws_per_group={0: 8}))
+    fp = query_fingerprint(q)
+
+    METRICS.reset()
+    # empty registry -> static probe (CPU: reference)
+    assert choose_backend(q) == "reference"
+    # a single measured cell proves nothing about the alternatives
+    METRICS.observe("reference", fp, tuples=1_000, seconds=1.0)
+    assert choose_backend(q) == "reference"
+    # two measured candidates -> the numbers decide
+    METRICS.observe("pallas-panestore", fp, tuples=50_000, seconds=1.0)
+    assert choose_backend(q) == "pallas-panestore"
+    assert plan(q).backend == "pallas-panestore"    # auto plan follows
+    # a (stale) cell for a backend that cannot run this query never wins
+    METRICS.observe("pallas", fp, tuples=10_000_000, seconds=1.0)
+    assert choose_backend(q) == "pallas-panestore"
+    # the slower measured candidate loses even when observed more recently
+    METRICS.observe("reference", fp, tuples=10, seconds=1.0)
+    assert choose_backend(q) == "pallas-panestore"
+    METRICS.reset()
+    assert choose_backend(q) == "reference"
+
+
+# ---------------------------------------------------------------------------
+# per-group batch-path counters (S2)
+
+
+def test_pergroup_batch_counters_surface():
+    g, k = _data(5, sort_groups=False)
+    w = Window(ws=32, wa=8, ws_per_group={0: 16})
+    cap = w.store_spec().capacity
+    ne = g.shape[0] // 8
+
+    res, _ = execute(Query(ops=("sum", "min"), window=w), g, k,
+                     backend="reference", collect_stats=True)
+    s = res.stats
+    assert int(s["pergroup_evals_batched"]) == ne
+    assert int(s["pergroup_replay_rows_per_launch"]) == ne * cap
+    assert int(s["pergroup_partial_dispatch"]) == 2   # int sum+min
+    assert int(s["pergroup_merge_dispatch"]) == 0
+    assert "pane_evictions" in s
+
+    # any merge op present -> every op rides the merge pass
+    res2, _ = execute(Query(ops=("sum", "median"), window=w), g, k,
+                      backend="reference", collect_stats=True)
+    assert int(res2.stats["pergroup_partial_dispatch"]) == 0
+    assert int(res2.stats["pergroup_merge_dispatch"]) == 2
+
+    # same counters on the kernel backend
+    res3, _ = execute(Query(ops=("sum", "min"), window=w), g, k,
+                      backend="pallas-panestore", collect_stats=True)
+    assert int(res3.stats["pergroup_partial_dispatch"]) == 2
+
+
+def test_streaming_windowed_dispatch_counters():
+    q = Query(ops=("sum",), window=Window(ws=16, wa=8, capacity=8),
+              streaming=True)
+    res, state = execute(q, jnp.zeros(16, jnp.int32), jnp.ones(16, jnp.int32),
+                         collect_stats=True)
+    assert int(res.stats["pergroup_partial_ops"]) == 1
+    assert int(res.stats["pergroup_merge_ops"]) == 0
+    res2, _ = execute(Query(ops=("median",),
+                            window=Window(ws=16, wa=8, capacity=8),
+                            streaming=True),
+                      jnp.zeros(16, jnp.int32), jnp.ones(16, jnp.int32),
+                      collect_stats=True)
+    assert int(res2.stats["pergroup_partial_ops"]) == 0
+    assert int(res2.stats["pergroup_merge_ops"]) == 1
+
+
+def test_streaming_aggregator_reports_donated_buffers():
+    from repro.query import Window as W
+    agg = StreamingAggregator("sum", window=W(ws=8, wa=4),
+                              collect_stats=True)
+    r1 = agg.push(jnp.zeros(8, jnp.int32), jnp.ones(8, jnp.int32))
+    assert int(r1.stats["store_donated_buffers"]) == agg._carry_leaves
+    r2 = agg.push(jnp.zeros(8, jnp.int32), jnp.ones(8, jnp.int32))
+    assert int(r2.stats["store_donated_buffers"]) == 2 * agg._carry_leaves

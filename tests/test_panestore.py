@@ -342,3 +342,131 @@ def test_spec_capacity_floor():
     spec = ps.PaneStoreSpec(wa=4, capacity=8, default_ws=16)
     assert spec.min_capacity == 5
     assert spec.runs == 8  # max_panes padded to a power of two
+
+
+# ---------------------------------------------------------------------------
+# batched replay + fused epilogue: bit-exact vs the per-chunk reference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _fresh_compile_caches(request):
+    """The oracle tests below compile many large scan/replay programs; on
+    a full-suite run the accumulated LLVM JIT state from ~300 earlier
+    tests can segfault XLA:CPU's backend_compile.  Dropping the caches
+    first keeps the compiler within its resource budget."""
+    if "oracle" in request.node.name or "fused" in request.node.name:
+        import jax
+
+        jax.clear_caches()
+
+
+def _per_chunk_oracle(spec, g, k, ops, state=None):
+    """The historical evaluation loop, spelled explicitly: push one WA
+    chunk, replay the whole store, repeat.  The oracle the batched paths
+    must match bit-for-bit."""
+    if state is None:
+        state = ps.init_store(spec, jnp.asarray(k).dtype)
+    outs = []
+    ne = len(g) // spec.wa
+    for e in range(ne):
+        sl = slice(e * spec.wa, (e + 1) * spec.wa)
+        state = ps.push(spec, state, jnp.asarray(g[sl]), jnp.asarray(k[sl]))
+        outs.append(ps.replay(spec, state, list(ops)))
+    stack = lambda *xs: np.stack([np.asarray(x) for x in xs])
+    og = stack(*(o[0] for o in outs))
+    vals = {nm: stack(*(o[1][nm] for o in outs)) for nm in outs[0][1]}
+    valid = stack(*(o[2] for o in outs))
+    num = stack(*(o[3] for o in outs))
+    return (og, vals, valid, num), state
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.sampled_from((5, 8, 40)),
+      float_keys=st.booleans())
+def test_property_batched_matches_per_chunk_oracle(seed, cap, float_keys):
+    """The tentpole invariant: one batched ``swag_per_group`` call (partial
+    fast path or single batched merge pass, by op mix) reproduces the
+    per-chunk push+replay loop exactly — including eviction-boundary and
+    capacity-squeeze streams (cap=5 keeps the store permanently starved)
+    — and its reconstructed final state continues the stream exactly."""
+    wa, n = 4, 96
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, 6, n).astype(np.int32)
+    if float_keys:
+        k = rng.normal(scale=30.0, size=n).astype(np.float32)
+    else:
+        k = rng.integers(-50, 50, n).astype(np.int32)
+    spec = ps.PaneStoreSpec(wa=wa, capacity=cap, default_ws=8,
+                            per_group=((0, 16), (1, 4)))
+    for ops in (("sum", "count", "min", "max", "mean"),   # pure partial
+                ALL_DIRECT):                              # merge present
+        (og, vals, valid, num), ostate = _per_chunk_oracle(spec, g, k, ops)
+        (bg, bvals, bvalid, bnum), bstate = swag_per_group(
+            jnp.array(g), jnp.array(k), spec=spec, ops=list(ops))
+        np.testing.assert_array_equal(og, np.asarray(bg))
+        np.testing.assert_array_equal(valid, np.asarray(bvalid))
+        np.testing.assert_array_equal(num, np.asarray(bnum))
+        for nm in vals:
+            np.testing.assert_array_equal(vals[nm], np.asarray(bvals[nm]),
+                                          err_msg=nm)
+        # continuation off the (reconstructed) final state
+        g2 = rng.integers(0, 6, 3 * wa).astype(np.int32)
+        k2 = (rng.normal(scale=30.0, size=3 * wa).astype(np.float32)
+              if float_keys else
+              rng.integers(-50, 50, 3 * wa).astype(np.int32))
+        (og2, vals2, _, _), _ = _per_chunk_oracle(spec, g2, k2, ops,
+                                                  state=ostate)
+        (bg2, bvals2, _, _), _ = swag_per_group(
+            jnp.array(g2), jnp.array(k2), spec=spec, ops=list(ops),
+            state=bstate)
+        np.testing.assert_array_equal(og2, np.asarray(bg2))
+        for nm in vals2:
+            np.testing.assert_array_equal(vals2[nm], np.asarray(bvals2[nm]),
+                                          err_msg=f"{nm} (continuation)")
+
+
+def test_fused_kernel_partial_path_parity(rng):
+    """All-partial op sets ride the fused push+replay kernel on the
+    pallas-panestore backend — outputs (and dtypes) must equal the
+    reference batch path exactly, under capacity pressure too."""
+    g, k = _mixed_stream(rng, 160)
+    for cap in (None, 6):
+        w = Window(ws=DEFAULT_WS, wa=8, ws_per_group=WS_MAP, capacity=cap)
+        q = Query(("sum", "count", "min", "max", "mean"), window=w)
+        assert registry.pergroup_kernel_path(q) == "partial-fused"
+        ref, _ = execute(q, jnp.array(g), jnp.array(k), backend="reference")
+        pal, _ = execute(q, jnp.array(g), jnp.array(k),
+                         backend="pallas-panestore")
+        np.testing.assert_array_equal(np.array(ref.groups),
+                                      np.array(pal.groups))
+        np.testing.assert_array_equal(np.array(ref.valid),
+                                      np.array(pal.valid))
+        for op in ref.values:
+            assert ref.values[op].dtype == pal.values[op].dtype, op
+            np.testing.assert_array_equal(np.array(ref.values[op]),
+                                          np.array(pal.values[op])), op
+
+
+def test_pergroup_kernel_path_probe():
+    w = Window(ws=16, wa=4, ws_per_group={0: 8})
+    assert registry.pergroup_kernel_path(
+        Query(("sum", "mean"), window=w)) == "partial-fused"
+    assert registry.pergroup_kernel_path(
+        Query(("sum", "median"), window=w)) == "merge-replay"
+    # float keys push reorder-sensitive sum/mean off the partial path
+    assert registry.pergroup_kernel_path(
+        Query(("sum",), window=w), key_dtype=jnp.float32) == "merge-replay"
+    assert registry.pergroup_kernel_path(
+        Query(("min", "max"), window=w),
+        key_dtype=jnp.float32) == "partial-fused"
+
+
+def test_streaming_push_traces_once(rng):
+    """Recompile guard: the donated-carry streaming step must trace exactly
+    once across pushes — a second trace means the donation or carry
+    structure changed shape between calls."""
+    g, k = _mixed_stream(rng, 96, n_groups=3)
+    agg = StreamingAggregator("sum", window=Window(ws=8, wa=4))
+    for lo in range(0, 96, 32):
+        agg.push(jnp.array(g[lo:lo + 32]), jnp.array(k[lo:lo + 32]))
+    assert agg._step._cache_size() == 1
